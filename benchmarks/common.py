@@ -1,0 +1,88 @@
+"""Shared machinery for the paper-reproduction benchmarks.
+
+Every benchmark mirrors one table/figure of the paper.  Budgets default to
+2K samples (paper: 10K) so the whole suite runs in minutes on one CPU core;
+``--full`` restores the paper's protocol.  Results print as CSV and are
+also returned for the aggregator (benchmarks.run).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import M3E, geomean
+from repro.core.m3e import METHODS
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+GB = 1024 ** 3
+
+# the paper's method lineup (Table IV)
+ALL_METHODS = ["magma", "stdga", "de", "cmaes", "tbpsa", "pso", "random",
+               "a2c", "ppo2", "herald_like", "ai_mt_like"]
+FAST_METHODS = ["magma", "stdga", "de", "pso", "random",
+                "herald_like", "ai_mt_like"]
+
+
+def std_parser(description: str) -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=description)
+    ap.add_argument("--budget", type=int, default=2_000)
+    ap.add_argument("--group-size", type=int, default=100)
+    ap.add_argument("--seeds", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="paper protocol: 10K budget, all methods")
+    ap.add_argument("--methods", default=None,
+                    help="comma list; default: fast set (all with --full)")
+    return ap
+
+
+def resolve(args):
+    budget = 10_000 if args.full else args.budget
+    methods = (args.methods.split(",") if args.methods
+               else (ALL_METHODS if args.full else FAST_METHODS))
+    return budget, methods
+
+
+def run_problem(task: str, setting: str, bw_gb: float, methods: Sequence[str],
+                budget: int, group_size: int = 100, seeds: int = 1,
+                seed0: int = 0) -> Dict[str, float]:
+    """Best throughput per method (averaged over seeds) on one problem."""
+    m3e = M3E(accel=get_setting(setting), bw_sys=bw_gb * GB)
+    group = build_task_groups(task, group_size=group_size, seed=seed0)[0]
+    out: Dict[str, float] = {}
+    for method in methods:
+        vals = []
+        for s in range(seeds):
+            res = m3e.search(group, method=method, budget=budget,
+                             seed=seed0 + s)
+            vals.append(res.best_fitness)
+        out[method] = float(np.mean(vals))
+    return out
+
+
+def print_normalized(title: str, rows: Dict[str, Dict[str, float]],
+                     norm_method: str = "magma") -> None:
+    """rows: problem -> {method: throughput}.  Prints MAGMA-normalized."""
+    methods = list(next(iter(rows.values())).keys())
+    print(f"\n== {title} (normalized to {norm_method}) ==")
+    print("problem," + ",".join(methods) + f",{norm_method}_abs_GFLOPs")
+    for prob, vals in rows.items():
+        norm = vals.get(norm_method, 1.0)
+        cells = ",".join(f"{vals[m] / norm:.3f}" for m in methods)
+        print(f"{prob},{cells},{norm / 1e9:.1f}")
+
+
+def summarize_vs(rows: Dict[str, Dict[str, float]], base: str = "magma"
+                 ) -> Dict[str, float]:
+    """geomean(base/method) across problems — the paper's 'x better'."""
+    methods = next(iter(rows.values())).keys()
+    out = {}
+    for m in methods:
+        if m == base:
+            continue
+        ratios = [rows[p][base] / max(rows[p][m], 1e-30) for p in rows]
+        out[m] = geomean(ratios)
+    return out

@@ -1,0 +1,30 @@
+"""Fig. 9: heterogeneous accelerators — S2 (small, BW=16) and S4 (large,
+BW=256) on Vision and Mix.  Validation: MAGMA best everywhere; AI-MT-like
+(homogeneous-targeted) collapses on heterogeneous settings."""
+from __future__ import annotations
+
+from benchmarks.common import (print_normalized, resolve, run_problem,
+                               std_parser, summarize_vs)
+
+
+def run(budget, methods, group_size=100, seeds=1):
+    rows = {}
+    for setting, bw in (("S2", 16.0), ("S4", 256.0)):
+        for task in ("Vision", "Mix"):
+            rows[f"{task}-{setting}-bw{int(bw)}"] = run_problem(
+                task, setting, bw, methods, budget, group_size, seeds)
+    print_normalized("Fig 9: heterogeneous S2/S4", rows)
+    vs = summarize_vs(rows)
+    print("geomean MAGMA advantage:",
+          {k: round(v, 3) for k, v in vs.items()})
+    return rows
+
+
+def main():
+    args = std_parser(__doc__).parse_args()
+    budget, methods = resolve(args)
+    run(budget, methods, args.group_size, args.seeds)
+
+
+if __name__ == "__main__":
+    main()

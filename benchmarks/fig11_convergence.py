@@ -1,0 +1,40 @@
+"""Fig. 11: convergence curves — best-so-far fitness vs samples for every
+method on (Vision, S2, BW=16) and (Mix, S3, BW=16).  Validation: baselines
+plateau at or below MAGMA's curve."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GB, resolve, std_parser
+from repro.core import M3E
+from repro.core.m3e import METHODS
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+
+def run(budget, methods, group_size=100):
+    for task, setting in (("Vision", "S2"), ("Mix", "S3")):
+        m3e = M3E(accel=get_setting(setting), bw_sys=16 * GB)
+        group = build_task_groups(task, group_size=group_size, seed=0)[0]
+        print(f"\n== Fig 11: ({task}, {setting}, BW=16) ==")
+        print("method,samples_curve...,final")
+        finals = {}
+        for method in methods:
+            res = m3e.search(group, method=method, budget=budget, seed=0)
+            pts = np.linspace(0, len(res.history_best) - 1, 8).astype(int)
+            curve = ",".join(f"{res.history_best[i]:.3e}" for i in pts)
+            print(f"{method},{curve}")
+            finals[method] = res.best_fitness
+        best = max(finals, key=finals.get)
+        print(f"best: {best}")
+    return finals
+
+
+def main():
+    args = std_parser(__doc__).parse_args()
+    budget, methods = resolve(args)
+    run(budget, methods, args.group_size)
+
+
+if __name__ == "__main__":
+    main()

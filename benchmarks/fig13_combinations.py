@@ -1,0 +1,49 @@
+"""Fig. 13: sub-accelerator combinations — S3 (Large Homog), S4 (Large
+Hetero), S5 (BigLittle) under BW=1 and BW=256 GB/s with MAGMA.
+Validation: hetero (S4) > homog (S3) at BW=1; homog wins at BW=256;
+BigLittle (S5) best at BW=1 despite the least compute."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GB, std_parser
+from repro.core import M3E
+from repro.costmodel import MaestroModel, get_setting
+from repro.workloads import build_task_groups
+from repro.core.job_analyzer import JobAnalyzer
+
+
+def run(budget, group_size=100, seeds=1):
+    print("== Fig 13: S3/S4/S5 x BW (Mix, MAGMA), normalized to S5 ==")
+    results = {}
+    for bw in (1.0, 256.0):
+        row = {}
+        for setting in ("S3", "S4", "S5"):
+            m3e = M3E(accel=get_setting(setting), bw_sys=bw * GB)
+            group = build_task_groups("Mix", group_size=group_size, seed=0)[0]
+            vals = [m3e.search(group, method="magma", budget=budget,
+                               seed=s).best_fitness for s in range(seeds)]
+            row[setting] = float(np.mean(vals))
+        results[bw] = row
+        norm = row["S5"]
+        print(f"BW={bw:g}: " + ", ".join(
+            f"{k}={v / norm:.3f}" for k, v in row.items()))
+
+    # job-analysis side (Fig 13 a-b): S4 higher latency but lower BW than S3
+    model = MaestroModel()
+    group = build_task_groups("Mix", group_size=group_size, seed=0)[0]
+    for setting in ("S3", "S4", "S5"):
+        table = JobAnalyzer(get_setting(setting), model).analyze(group.jobs)
+        print(f"{setting}: mean no-stall lat {table.lat.mean():.3e} s, "
+              f"mean req BW {table.bw.mean() / 2**30:.2f} GB/s")
+    return results
+
+
+def main():
+    args = std_parser(__doc__).parse_args()
+    budget = 10_000 if args.full else args.budget
+    run(budget, args.group_size, args.seeds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Fig. 16: MAGMA operator ablation on (Vision, S2, BW=16) and
+(Mix, S3, BW=16): mutation-only vs +crossover-gen vs all four operators.
+Validation: each added operator level improves (or matches) sample
+efficiency."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GB, std_parser
+from repro.core import M3E, MagmaConfig
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+LEVELS = {
+    "mutation_only": MagmaConfig(enable_crossover_gen=False,
+                                 enable_crossover_rg=False,
+                                 enable_crossover_accel=False),
+    "mut+crossover_gen": MagmaConfig(enable_crossover_rg=False,
+                                     enable_crossover_accel=False),
+    "all_four": MagmaConfig(),
+}
+
+
+def run(budget, group_size=100, seeds=2):
+    out = {}
+    for task, setting in (("Vision", "S2"), ("Mix", "S3")):
+        m3e = M3E(accel=get_setting(setting), bw_sys=16 * GB)
+        group = build_task_groups(task, group_size=group_size, seed=0)[0]
+        print(f"\n== Fig 16: ({task}, {setting}, BW=16) ==")
+        vals = {}
+        for name, cfg in LEVELS.items():
+            fits = [m3e.search(group, method="magma", budget=budget, seed=s,
+                               cfg=cfg).best_fitness for s in range(seeds)]
+            vals[name] = float(np.mean(fits))
+        norm = vals["all_four"]
+        for name, v in vals.items():
+            print(f"{name:20s} {v / norm:.3f}")
+        out[f"{task}-{setting}"] = vals
+    return out
+
+
+def main():
+    args = std_parser(__doc__).parse_args()
+    budget = 10_000 if args.full else args.budget
+    run(budget, args.group_size, max(args.seeds, 2))
+
+
+if __name__ == "__main__":
+    main()

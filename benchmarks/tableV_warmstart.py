@@ -1,0 +1,79 @@
+"""Table V: warm-start — optimize on Insts0, transfer to Insts1..5.
+Rows: Raw (random individual), Trf-0-ep (transferred, no optimization),
+Trf-1-ep, Trf-30-ep, Trf-100-ep (full).  Validation: Trf-0-ep > Raw and
+Trf-0/1-ep recover most of the full run immediately.
+
+Note on magnitude: the paper reports Raw at 0.02-0.09 of full (so 7.4-152x
+gains).  Our BW allocator is *work-conserving* (idle bandwidth is always
+re-allocated proportionally, Algorithm 1 taken literally), which strongly
+compresses how bad a random mapping can be at BW=1 GB/s — every schedule
+is throttled toward total_bytes/BW_sys.  The transfer structure (the
+paper's actual claim) reproduces: Trf-0-ep jumps most of the way to the
+full-search level with zero optimization on the new group."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GB, std_parser
+from repro.core import M3E, MagmaConfig
+from repro.core.encoding import random_population
+from repro.core.warmstart import WarmStartEngine
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+import jax
+
+
+def run(pop=100, group_size=100, n_insts=4, epochs=(0, 1, 30, 100)):
+    ws = WarmStartEngine()
+    m3e = M3E(accel=get_setting("S4"), bw_sys=1 * GB, warm_start=ws)
+    groups = build_task_groups("Mix", group_size=group_size,
+                               num_groups=n_insts + 1, seed=0)
+    cfg = MagmaConfig(population=pop)
+    # full optimization on Insts0 seeds the warm-start cache
+    m3e.search(groups[0], method="magma", budget=pop * max(epochs),
+               seed=0, cfg=cfg)
+
+    print("== Table V: warm-start on (Mix, S4, BW=1) ==")
+    print("row," + ",".join(f"Insts{i}" for i in range(1, n_insts + 1)))
+    rows = {}
+    # Raw: mean fitness of a random individual (the usual starting point)
+    raws, finals = [], {e: [] for e in epochs}
+    for i in range(1, n_insts + 1):
+        fit = m3e.prepare(groups[i])
+        rnd = random_population(jax.random.PRNGKey(100 + i), 32,
+                                fit.group_size, fit.num_accels)
+        raws.append(float(np.mean(np.asarray(fit(rnd.accel, rnd.prio)))))
+        for e in epochs:
+            budget = max(pop * e, pop)   # e generations (>=1 evaluation)
+            res = m3e.search(groups[i], method="magma", budget=budget,
+                             seed=i, cfg=cfg)
+            if e == 0:
+                # Trf-0-ep = best of the transferred population, no evolution
+                finals[e].append(res.history_best[0])
+            else:
+                finals[e].append(res.best_fitness)
+    full = np.array(finals[max(epochs)])
+    print("Raw," + ",".join(f"{v / f:.3f}" for v, f in zip(raws, full)))
+    for e in epochs:
+        print(f"Trf-{e}-ep," + ",".join(
+            f"{v / f:.3f}" for v, f in zip(finals[e], full)))
+    gain0 = float(np.mean(np.array(finals[0]) / np.array(raws)))
+    full_frac = float(np.mean(np.array(finals[0]) / full))
+    print(f"Trf-0-ep vs Raw: {gain0:.2f}x; Trf-0-ep reaches "
+          f"{full_frac:.0%} of the full search "
+          f"(paper: 7.4x-152x over Raw — see docstring on the magnitude)")
+    rows["gain0"] = gain0
+    rows["full_frac"] = full_frac
+    assert gain0 > 1.1 and full_frac > 0.75
+    return rows
+
+
+def main():
+    args = std_parser(__doc__).parse_args()
+    epochs = (0, 1, 30, 100) if args.full else (0, 1, 10, 20)
+    run(group_size=args.group_size, epochs=epochs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Compare every Table-IV optimization method on one problem, with
+convergence curves and the warm-start workflow.
+
+    PYTHONPATH=src python examples/scheduler_search.py [--budget 2000]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import M3E, MagmaConfig
+from repro.core.warmstart import WarmStartEngine
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+GB = 1024 ** 3
+METHODS = ["magma", "stdga", "de", "cmaes", "tbpsa", "pso", "random",
+           "a2c", "ppo2", "herald_like", "ai_mt_like"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=int, default=2_000)
+    ap.add_argument("--setting", default="S4")
+    ap.add_argument("--bw", type=float, default=1.0)
+    args = ap.parse_args()
+
+    m3e = M3E(accel=get_setting(args.setting), bw_sys=args.bw * GB,
+              warm_start=WarmStartEngine())
+    groups = build_task_groups("Mix", group_size=100, num_groups=2, seed=0)
+
+    print(f"== ({args.setting}, Mix, BW={args.bw:g} GB/s), "
+          f"budget {args.budget} ==")
+    fits = {}
+    for method in METHODS:
+        res = m3e.search(groups[0], method=method, budget=args.budget,
+                         seed=0)
+        fits[method] = res.best_fitness
+        curve = res.history_best
+        pts = np.linspace(0, len(curve) - 1, 5).astype(int)
+        spark = " -> ".join(f"{curve[i] / 1e9:.0f}" for i in pts)
+        print(f"{method:12s} {res.best_fitness / 1e9:9.2f} GFLOPs/s   "
+              f"[{spark}]   {res.wall_time_s:5.1f}s")
+    best = max(fits, key=fits.get)
+    print(f"\nbest method: {best}")
+
+    # warm start onto a new group of the same task type (Table V workflow)
+    warm = m3e.search(groups[1], method="magma", budget=100, seed=1)
+    print(f"warm-started on a NEW group, 1 generation: "
+          f"{warm.best_fitness / 1e9:.2f} GFLOPs/s "
+          f"(vs full-search level {fits['magma'] / 1e9:.2f})")
+
+
+if __name__ == "__main__":
+    main()

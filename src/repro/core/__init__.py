@@ -1,0 +1,17 @@
+"""M3E + MAGMA — the paper's contribution (Sections IV & V)."""
+from repro.core.encoding import Individual, Population, decode, decode_to_lists, random_population
+from repro.core.bw_allocator import (
+    simulate, simulate_decoded, simulate_numpy, simulate_population, throughput)
+from repro.core.job_analyzer import JobAnalyzer, JobAnalysisTable, table_from_arrays
+from repro.core.fitness import FitnessFn
+from repro.core.magma import MagmaConfig, SearchResult, magma_search
+from repro.core.warmstart import WarmStartEngine
+from repro.core.m3e import M3E, METHODS, geomean
+
+__all__ = [
+    "Individual", "Population", "decode", "decode_to_lists", "random_population",
+    "simulate", "simulate_decoded", "simulate_numpy", "simulate_population",
+    "throughput", "JobAnalyzer", "JobAnalysisTable", "table_from_arrays",
+    "FitnessFn", "MagmaConfig", "SearchResult", "magma_search",
+    "WarmStartEngine", "M3E", "METHODS", "geomean",
+]

@@ -1,0 +1,75 @@
+"""Genome encoding/decoding (Section IV-A, Fig. 5a).
+
+An individual = two genomes of length G (group size):
+
+  accel genome   int32 in [0, A)   — sub-accelerator selection per job
+  prio genome    float32 in [0, 1) — job priority (0 = highest)
+
+Decoding produces, per sub-accelerator, the ordered queue of its jobs.  For
+the vectorized simulator the queue is materialized as dense (A, G) arrays of
+job indices (argsort of priority with non-members pushed to the end) plus a
+per-accelerator count.  Everything is jit/vmap-friendly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Individual(NamedTuple):
+    accel: jnp.ndarray   # (G,) int32
+    prio: jnp.ndarray    # (G,) float32
+
+
+class Population(NamedTuple):
+    accel: jnp.ndarray   # (P, G) int32
+    prio: jnp.ndarray    # (P, G) float32
+
+    @property
+    def size(self) -> int:
+        return self.accel.shape[0]
+
+
+class DecodedSchedule(NamedTuple):
+    queue: jnp.ndarray   # (A, G) int32 job ids, first count[a] valid
+    count: jnp.ndarray   # (A,)  int32
+
+
+def random_population(key: jax.Array, pop: int, group: int, accels: int) -> Population:
+    ka, kp = jax.random.split(key)
+    return Population(
+        accel=jax.random.randint(ka, (pop, group), 0, accels, dtype=jnp.int32),
+        prio=jax.random.uniform(kp, (pop, group), dtype=jnp.float32),
+    )
+
+
+@partial(jax.jit, static_argnames=("num_accels",))
+def decode(accel: jnp.ndarray, prio: jnp.ndarray, num_accels: int) -> DecodedSchedule:
+    """Decode one individual into per-accelerator ordered queues."""
+    G = accel.shape[0]
+    job_ids = jnp.arange(G, dtype=jnp.int32)
+
+    def per_accel(a):
+        member = accel == a
+        # non-members get +2 so they sort after all members (prio < 1)
+        key = prio + jnp.where(member, 0.0, 2.0)
+        order = jnp.argsort(key)
+        return job_ids[order], member.sum(dtype=jnp.int32)
+
+    queue, count = jax.vmap(per_accel)(jnp.arange(num_accels, dtype=jnp.int32))
+    return DecodedSchedule(queue=queue, count=count)
+
+
+def decode_to_lists(accel, prio, num_accels: int):
+    """Host-side convenience: list of job-id lists per accelerator."""
+    accel = np.asarray(accel)
+    prio = np.asarray(prio)
+    out = []
+    for a in range(num_accels):
+        ids = np.where(accel == a)[0]
+        out.append([int(i) for i in ids[np.argsort(prio[ids], kind="stable")]])
+    return out

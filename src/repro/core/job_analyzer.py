@@ -1,0 +1,75 @@
+"""Job Analyzer + Job Analysis Table (Section IV-D2/D4).
+
+Profiles every (job, sub-accelerator) pair once with the cost model and
+caches the result; inside the optimization loop the table is a pure lookup
+(exactly the paper's design — the cost model is never re-queried).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.costmodel.accelerators import AcceleratorConfig
+from repro.costmodel.maestro import MaestroModel
+from repro.workloads.benchmark import Job
+
+
+@dataclasses.dataclass(frozen=True)
+class JobAnalysisTable:
+    """lat[g, a] = no-stall latency (s); bw[g, a] = required BW (B/s);
+    energy[g, a] = job energy (J, Section IV-C alternative objectives)."""
+    lat: np.ndarray          # (G, A) float64
+    bw: np.ndarray           # (G, A) float64
+    flops: np.ndarray        # (G,)  float64
+    num_accels: int
+    energy: np.ndarray = None   # (G, A) float64 (optional)
+
+    @property
+    def group_size(self) -> int:
+        return self.lat.shape[0]
+
+    @property
+    def total_flops(self) -> float:
+        return float(self.flops.sum())
+
+
+class JobAnalyzer:
+    def __init__(self, accel: AcceleratorConfig, model: MaestroModel | None = None):
+        self.accel = accel
+        self.model = model or MaestroModel()
+        self._cache: dict = {}
+
+    def analyze(self, jobs: Sequence[Job]) -> JobAnalysisTable:
+        A = self.accel.num_sub_accels
+        G = len(jobs)
+        lat = np.empty((G, A), dtype=np.float64)
+        bw = np.empty((G, A), dtype=np.float64)
+        energy = np.empty((G, A), dtype=np.float64)
+        flops = np.empty((G,), dtype=np.float64)
+        for g, job in enumerate(jobs):
+            flops[g] = job.flops
+            for a, sub in enumerate(self.accel.sub_accels):
+                key = (job.layer, sub)
+                prof = self._cache.get(key)
+                if prof is None:
+                    prof = self.model.profile(job.layer, sub)
+                    self._cache[key] = prof
+                lat[g, a] = prof.no_stall_latency_s
+                bw[g, a] = prof.required_bw
+                energy[g, a] = prof.energy_j
+        return JobAnalysisTable(lat=lat, bw=bw, flops=flops, num_accels=A,
+                                energy=energy)
+
+
+def table_from_arrays(lat, bw, flops, energy=None) -> JobAnalysisTable:
+    """Build a table directly (used by the TPU-submesh serving scheduler)."""
+    lat = np.asarray(lat, dtype=np.float64)
+    bw = np.asarray(bw, dtype=np.float64)
+    flops = np.asarray(flops, dtype=np.float64)
+    assert lat.shape == bw.shape and lat.shape[0] == flops.shape[0]
+    return JobAnalysisTable(lat=lat, bw=bw, flops=flops,
+                            num_accels=lat.shape[1],
+                            energy=None if energy is None
+                            else np.asarray(energy, dtype=np.float64))

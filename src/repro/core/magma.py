@@ -1,0 +1,201 @@
+"""MAGMA — Multi-Accelerator Genetic Mapping Algorithm (Section V).
+
+GA over the M3E encoding with the paper's four operators:
+
+  mutation        (rate 0.05 per gene)  random re-draw of selected genes
+  crossover-gen   (rate 0.90)  single-pivot crossover of ONE genome
+                  (accel-selection OR job-priority), leaving the other intact
+  crossover-rg    (rate 0.05)  the same index range of BOTH genomes is taken
+                  from the second parent — preserves per-job cross-genome
+                  dependency
+  crossover-accel (rate 0.05)  one parent's complete per-core schedule (job
+                  set + ordering for a sampled sub-accelerator) is copied
+                  into the child; displaced jobs are randomly re-assigned
+                  for load balance
+
+Population = group size (paper default 100); sampling budget 10K points =
+100 generations.  Every generation is one jitted call: operators are
+computed branch-free and selected per-child with ``jnp.where``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import Population, random_population
+from repro.core.fitness import FitnessFn
+
+
+@dataclasses.dataclass
+class MagmaConfig:
+    population: int = 100
+    elite_frac: float = 0.10
+    mutation_rate: float = 0.05
+    p_crossover_gen: float = 0.90
+    p_crossover_rg: float = 0.05
+    p_crossover_accel: float = 0.05
+    # ablation switches (Fig. 16)
+    enable_crossover_gen: bool = True
+    enable_crossover_rg: bool = True
+    enable_crossover_accel: bool = True
+
+
+@dataclasses.dataclass
+class SearchResult:
+    best_fitness: float
+    best_accel: np.ndarray
+    best_prio: np.ndarray
+    history_samples: np.ndarray    # cumulative evaluations
+    history_best: np.ndarray       # best-so-far fitness
+    n_samples: int
+    wall_time_s: float
+    final_population: Optional[Population] = None
+
+
+# ---------------------------------------------------------------------------
+# operators (single child; vmapped over the brood)
+# ---------------------------------------------------------------------------
+def _mutate(key, accel, prio, rate, num_accels):
+    km, ka, kp = jax.random.split(key, 3)
+    G = accel.shape[0]
+    mask = jax.random.uniform(km, (G,)) < rate
+    new_accel = jax.random.randint(ka, (G,), 0, num_accels, dtype=jnp.int32)
+    new_prio = jax.random.uniform(kp, (G,), dtype=jnp.float32)
+    return (jnp.where(mask, new_accel, accel),
+            jnp.where(mask, new_prio, prio))
+
+
+def _crossover_gen(key, dad, mom):
+    """Pivot crossover on one randomly-chosen genome only."""
+    kg, kp = jax.random.split(key)
+    G = dad[0].shape[0]
+    which = jax.random.bernoulli(kg)                 # 0: accel, 1: prio
+    pivot = jax.random.randint(kp, (), 1, G)
+    take_mom = jnp.arange(G) >= pivot
+    accel = jnp.where(~which & take_mom, mom[0], dad[0])
+    prio = jnp.where(which & take_mom, mom[1], dad[1])
+    return accel, prio
+
+
+def _crossover_rg(key, dad, mom):
+    """Range crossover applied to BOTH genomes at the same indices."""
+    k1, k2 = jax.random.split(key)
+    G = dad[0].shape[0]
+    a = jax.random.randint(k1, (), 0, G)
+    b = jax.random.randint(k2, (), 0, G)
+    lo, hi = jnp.minimum(a, b), jnp.maximum(a, b) + 1
+    idx = jnp.arange(G)
+    take_mom = (idx >= lo) & (idx < hi)
+    return (jnp.where(take_mom, mom[0], dad[0]),
+            jnp.where(take_mom, mom[1], dad[1]))
+
+
+def _crossover_accel(key, dad, mom, num_accels):
+    """Copy mom's schedule for one sub-accelerator; rebalance displaced jobs."""
+    ka, kr = jax.random.split(key)
+    G = dad[0].shape[0]
+    a = jax.random.randint(ka, (), 0, num_accels)
+    from_mom = mom[0] == a
+    accel = jnp.where(from_mom, mom[0], dad[0])
+    prio = jnp.where(from_mom, mom[1], dad[1])
+    # jobs dad had on `a` but mom didn't: randomly re-assign (load balance)
+    displaced = (dad[0] == a) & ~from_mom
+    rnd = jax.random.randint(kr, (G,), 0, num_accels, dtype=jnp.int32)
+    accel = jnp.where(displaced, rnd, accel)
+    return accel, prio
+
+
+def _make_child(key, dad, mom, cfg: MagmaConfig, num_accels: int):
+    kop, kg, krg, kac, kmu = jax.random.split(key, 5)
+    p = jnp.array([cfg.p_crossover_gen if cfg.enable_crossover_gen else 0.0,
+                   cfg.p_crossover_rg if cfg.enable_crossover_rg else 0.0,
+                   cfg.p_crossover_accel if cfg.enable_crossover_accel else 0.0])
+    p = jnp.concatenate([p, jnp.maximum(1.0 - p.sum(), 0.0)[None]])
+    op = jax.random.choice(kop, 4, p=p / p.sum())
+
+    c_gen = _crossover_gen(kg, dad, mom)
+    c_rg = _crossover_rg(krg, dad, mom)
+    c_ac = _crossover_accel(kac, dad, mom, num_accels)
+
+    accel = jnp.select([op == 0, op == 1, op == 2], [c_gen[0], c_rg[0], c_ac[0]],
+                       dad[0])
+    prio = jnp.select([op == 0, op == 1, op == 2], [c_gen[1], c_rg[1], c_ac[1]],
+                      dad[1])
+    return _mutate(kmu, accel, prio, cfg.mutation_rate, num_accels)
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_accels", "n_elite"))
+def _next_generation(key, pop: Population, fitness: jnp.ndarray,
+                     cfg: MagmaConfig, num_accels: int, n_elite: int) -> Population:
+    P = pop.accel.shape[0]
+    order = jnp.argsort(-fitness)
+    elite_idx = order[:n_elite]
+    e_accel = pop.accel[elite_idx]
+    e_prio = pop.prio[elite_idx]
+
+    n_child = P - n_elite
+    kd, km, kc = jax.random.split(key, 3)
+    dads = jax.random.randint(kd, (n_child,), 0, n_elite)
+    moms = jax.random.randint(km, (n_child,), 0, n_elite)
+    child_keys = jax.random.split(kc, n_child)
+
+    def one(ck, d, m):
+        return _make_child(ck, (e_accel[d], e_prio[d]), (e_accel[m], e_prio[m]),
+                           cfg, num_accels)
+
+    c_accel, c_prio = jax.vmap(one)(child_keys, dads, moms)
+    return Population(accel=jnp.concatenate([e_accel, c_accel]),
+                      prio=jnp.concatenate([e_prio, c_prio]))
+
+
+# MagmaConfig must be hashable for static_argnames
+MagmaConfig.__hash__ = lambda self: hash(dataclasses.astuple(self))  # type: ignore
+
+
+def magma_search(fitness_fn: FitnessFn, budget: int = 10_000,
+                 cfg: MagmaConfig | None = None, seed: int = 0,
+                 init_population: Population | None = None,
+                 keep_population: bool = False) -> SearchResult:
+    """Run MAGMA for ``budget`` fitness evaluations (paper: 10K)."""
+    cfg = cfg or MagmaConfig()
+    key = jax.random.PRNGKey(seed)
+    P = cfg.population
+    n_elite = max(1, int(round(cfg.elite_frac * P)))
+    G, A = fitness_fn.group_size, fitness_fn.num_accels
+
+    key, k0 = jax.random.split(key)
+    pop = init_population if init_population is not None else \
+        random_population(k0, P, G, A)
+
+    t0 = time.perf_counter()
+    samples, hist_s, hist_b = 0, [], []
+    best_fit, best_ind = -np.inf, None
+    generations = max(1, budget // P)
+    for _ in range(generations):
+        fit = fitness_fn(pop.accel, pop.prio)
+        samples += P
+        i = int(jnp.argmax(fit))
+        f = float(fit[i])
+        if f > best_fit:
+            best_fit = f
+            best_ind = (np.asarray(pop.accel[i]), np.asarray(pop.prio[i]))
+        hist_s.append(samples)
+        hist_b.append(best_fit)
+        if samples >= budget:
+            break
+        key, kg = jax.random.split(key)
+        pop = _next_generation(kg, pop, fit, cfg, A, n_elite)
+
+    return SearchResult(
+        best_fitness=best_fit,
+        best_accel=best_ind[0], best_prio=best_ind[1],
+        history_samples=np.asarray(hist_s), history_best=np.asarray(hist_b),
+        n_samples=samples, wall_time_s=time.perf_counter() - t0,
+        final_population=pop if keep_population else None,
+    )

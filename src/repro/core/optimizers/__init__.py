@@ -1,0 +1,4 @@
+from repro.core.optimizers import blackbox
+from repro.core.optimizers.base import decode_x, eval_x
+
+__all__ = ["blackbox", "decode_x", "eval_x"]

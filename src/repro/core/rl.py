@@ -1,0 +1,255 @@
+"""RL baseline mappers — A2C and PPO2 (Table IV), in pure JAX.
+
+The episode builds a schedule job-by-job: at step g the policy observes
+job g's per-accelerator (no-stall latency, required BW) plus the running
+per-accelerator load, and emits (i) a categorical sub-accelerator choice and
+(ii) a Gaussian priority (squashed to [0,1]).  The terminal reward is the
+group throughput of the completed schedule (normalized by a random-schedule
+baseline so gradients are scale-free).
+
+Policy/critic: 3 MLP layers x 128 (Table IV).  A2C uses RMSProp lr 7e-4,
+discount 0.99; PPO2 uses Adam lr 2.5e-4, clip 0.2, discount 0.99.
+One "sample" of the paper's 10K budget = one full-schedule evaluation =
+one episode; episodes run in jit-vmapped batches.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fitness import FitnessFn
+from repro.core.magma import SearchResult
+from repro.train.optimizer import RMSProp, AdamW, apply_updates
+
+_HID = 128
+
+
+def _mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a),
+            "b": jnp.zeros((b,)),
+        })
+    return params
+
+
+def _mlp(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            x = jnp.tanh(x)
+    return x
+
+
+class PolicyParams(NamedTuple):
+    torso: list
+    accel_head: list
+    prio_head: list
+    critic: list
+    log_std: jnp.ndarray
+
+
+def init_policy(key, feat_dim: int, num_accels: int) -> PolicyParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return PolicyParams(
+        torso=_mlp_init(k1, [feat_dim, _HID, _HID]),
+        accel_head=_mlp_init(k2, [_HID, _HID, num_accels]),
+        prio_head=_mlp_init(k3, [_HID, _HID, 1]),
+        critic=_mlp_init(k4, [feat_dim, _HID, _HID, 1]),
+        log_std=jnp.zeros(()),
+    )
+
+
+def _features(lat_n, bw_n, load, g, G):
+    """Per-step observation: job tables + normalized accel load + progress."""
+    return jnp.concatenate([
+        lat_n[g], bw_n[g], load / (jnp.max(load) + 1e-6),
+        jnp.array([g / G]),
+    ])
+
+
+def _rollout(params: PolicyParams, key, lat_n, bw_n, num_accels: int):
+    """One episode -> (accel genome, prio genome, per-step logp, values, entropy)."""
+    G = lat_n.shape[0]
+
+    def step(carry, g):
+        key, load = carry
+        key, ka, kp = jax.random.split(key, 3)
+        obs = _features(lat_n, bw_n, load, g, G)
+        h = jnp.tanh(_mlp(params.torso, obs))
+        logits = _mlp(params.accel_head, h)
+        a = jax.random.categorical(ka, logits)
+        logp_a = jax.nn.log_softmax(logits)[a]
+        mean = _mlp(params.prio_head, h)[0]
+        std = jnp.exp(params.log_std)
+        z = mean + std * jax.random.normal(kp)
+        prio = jax.nn.sigmoid(z)
+        logp_p = (-0.5 * ((z - mean) / std) ** 2
+                  - params.log_std - 0.5 * jnp.log(2 * jnp.pi))
+        v = _mlp(params.critic, obs)[0]
+        ent = -jnp.sum(jax.nn.softmax(logits) * jax.nn.log_softmax(logits))
+        load = load.at[a].add(lat_n[g, a])
+        return (key, load), (a.astype(jnp.int32), prio, logp_a + logp_p, v, ent, z)
+
+    (_, _), (accel, prio, logp, values, ent, z) = jax.lax.scan(
+        step, (key, jnp.zeros(num_accels)), jnp.arange(G))
+    return accel, prio.astype(jnp.float32), logp, values, ent, z
+
+
+def _returns(reward, G, gamma):
+    # single terminal reward discounted back through the episode
+    return reward * gamma ** jnp.arange(G - 1, -1, -1, dtype=jnp.float32)
+
+
+def _prep_tables(fitness_fn: FitnessFn):
+    lat = np.log10(np.maximum(fitness_fn.table.lat, 1e-12))
+    bw = np.log10(np.maximum(fitness_fn.table.bw, 1e-3))
+    lat_n = (lat - lat.mean()) / (lat.std() + 1e-6)
+    bw_n = (bw - bw.mean()) / (bw.std() + 1e-6)
+    return jnp.asarray(lat_n, jnp.float32), jnp.asarray(bw_n, jnp.float32)
+
+
+def _run_rl(fitness_fn: FitnessFn, budget: int, seed: int, batch: int,
+            update_fn, opt, gamma: float):
+    key = jax.random.PRNGKey(seed)
+    lat_n, bw_n = _prep_tables(fitness_fn)
+    G, A = fitness_fn.group_size, fitness_fn.num_accels
+    feat_dim = 2 * A + A + 1
+    key, kp = jax.random.split(key)
+    params = init_policy(kp, feat_dim, A)
+    opt_state = opt.init(params)
+
+    # reward normalizer: mean random-schedule fitness
+    key, kr = jax.random.split(key)
+    from repro.core.encoding import random_population
+    rnd = random_population(kr, 32, G, A)
+    scale = float(np.mean(np.asarray(fitness_fn(rnd.accel, rnd.prio)))) + 1e-9
+
+    t0 = time.perf_counter()
+    samples, hist_s, hist_b = 0, [], []
+    best, best_ind = -np.inf, None
+    while samples < budget:
+        key, kb = jax.random.split(key)
+        keys = jax.random.split(kb, batch)
+        accel, prio, logp, values, ent, z = jax.vmap(
+            lambda k: _rollout(params, k, lat_n, bw_n, A))(keys)
+        fits = fitness_fn(accel, prio)
+        samples += batch
+        rewards = jnp.asarray(fits) / scale
+        params, opt_state = update_fn(params, opt_state, accel, z, rewards,
+                                      lat_n, bw_n, A, gamma)
+        i = int(jnp.argmax(fits))
+        if float(fits[i]) > best:
+            best = float(fits[i])
+            best_ind = (np.asarray(accel[i]), np.asarray(prio[i]))
+        hist_s.append(samples)
+        hist_b.append(best)
+
+    return SearchResult(best_fitness=best, best_accel=best_ind[0],
+                        best_prio=best_ind[1],
+                        history_samples=np.asarray(hist_s),
+                        history_best=np.asarray(hist_b), n_samples=samples,
+                        wall_time_s=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# A2C
+# ---------------------------------------------------------------------------
+def _replay_logp(params, accel, z, lat_n, bw_n, num_accels):
+    """Recompute logp/values/entropy of recorded actions under `params`."""
+    G = lat_n.shape[0]
+
+    def step(load, g):
+        obs = _features(lat_n, bw_n, load, g, G)
+        h = jnp.tanh(_mlp(params.torso, obs))
+        logits = _mlp(params.accel_head, h)
+        logp_a = jax.nn.log_softmax(logits)[accel[g]]
+        mean = _mlp(params.prio_head, h)[0]
+        std = jnp.exp(params.log_std)
+        logp_p = (-0.5 * ((z[g] - mean) / std) ** 2
+                  - params.log_std - 0.5 * jnp.log(2 * jnp.pi))
+        v = _mlp(params.critic, obs)[0]
+        ent = -jnp.sum(jax.nn.softmax(logits) * jax.nn.log_softmax(logits))
+        load = load.at[accel[g]].add(lat_n[g, accel[g]])
+        return load, (logp_a + logp_p, v, ent)
+
+    _, (logp, v, ent) = jax.lax.scan(step, jnp.zeros(num_accels), jnp.arange(G))
+    return logp, v, ent
+
+
+@partial(jax.jit, static_argnames=("num_accels",))
+def _a2c_update(params, opt_state, accel, z, rewards, lat_n, bw_n,
+                num_accels, gamma):
+    G = lat_n.shape[0]
+    opt = RMSProp(lr=7e-4)
+
+    def loss_fn(p):
+        def per_ep(acc_e, z_e, r_e):
+            logp, v, ent = _replay_logp(p, acc_e, z_e, lat_n, bw_n, num_accels)
+            ret = _returns(r_e, G, gamma)
+            adv = jax.lax.stop_gradient(ret - v)
+            return (-(logp * adv).mean() + 0.5 * jnp.mean((v - ret) ** 2)
+                    - 0.01 * ent.mean())
+        return jax.vmap(per_ep)(accel, z, rewards).mean()
+
+    grads = jax.grad(loss_fn)(params)
+    updates, opt_state = opt.update(grads, opt_state)
+    return apply_updates(params, updates), opt_state
+
+
+def a2c(fitness_fn: FitnessFn, budget: int = 10_000, seed: int = 0,
+        batch: int = 20, gamma: float = 0.99) -> SearchResult:
+    return _run_rl(fitness_fn, budget, seed, batch, _a2c_update,
+                   RMSProp(lr=7e-4), gamma)
+
+
+# ---------------------------------------------------------------------------
+# PPO2
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("num_accels",))
+def _ppo_update(params, opt_state, accel, z, rewards, lat_n, bw_n,
+                num_accels, gamma):
+    G = lat_n.shape[0]
+    opt = AdamW(lr=2.5e-4)
+    clip = 0.2
+
+    def old_logp(acc_e, z_e):
+        logp, v, _ = _replay_logp(params, acc_e, z_e, lat_n, bw_n, num_accels)
+        return logp, v
+
+    logp_old, v_old = jax.vmap(old_logp)(accel, z)
+    logp_old = jax.lax.stop_gradient(logp_old)
+    v_old = jax.lax.stop_gradient(v_old)
+
+    def loss_fn(p):
+        def per_ep(acc_e, z_e, r_e, lo_e):
+            logp, v, ent = _replay_logp(p, acc_e, z_e, lat_n, bw_n, num_accels)
+            ret = _returns(r_e, G, gamma)
+            adv = jax.lax.stop_gradient(ret - v)
+            adv = (adv - adv.mean()) / (adv.std() + 1e-6)
+            ratio = jnp.exp(logp - lo_e)
+            surr = jnp.minimum(ratio * adv,
+                               jnp.clip(ratio, 1 - clip, 1 + clip) * adv)
+            return (-surr.mean() + 0.5 * jnp.mean((v - ret) ** 2)
+                    - 0.01 * ent.mean())
+        return jax.vmap(per_ep)(accel, z, rewards, logp_old).mean()
+
+    new_params, new_state = params, opt_state
+    for _ in range(4):  # PPO epochs
+        grads = jax.grad(loss_fn)(new_params)
+        updates, new_state = opt.update(grads, new_state, new_params)
+        new_params = apply_updates(new_params, updates)
+    return new_params, new_state
+
+
+def ppo2(fitness_fn: FitnessFn, budget: int = 10_000, seed: int = 0,
+         batch: int = 20, gamma: float = 0.99) -> SearchResult:
+    return _run_rl(fitness_fn, budget, seed, batch, _ppo_update,
+                   AdamW(lr=2.5e-4), gamma)

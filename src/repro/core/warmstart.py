@@ -1,0 +1,48 @@
+"""Warm-start engine (Section V-C).
+
+Caches the converged population per *task type* (Vision / Lang / Recom /
+Mix).  When a new group of the same type arrives, the cached population —
+re-randomized only in priorities' low bits to preserve diversity — replaces
+random initialization.  Table V: Trf-0-ep alone recovers most of a full
+optimization; Trf-1-ep ~ 93% of it.
+
+Transfer is valid across groups because groups of the same task type share
+the (model, layer)-distribution even though the concrete jobs differ; the
+accel-selection genome encodes "which kind of job goes to which kind of
+core", which is the transferable knowledge.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Population
+
+
+class WarmStartEngine:
+    def __init__(self, jitter: float = 0.02):
+        self._store: Dict[str, Population] = {}
+        self.jitter = jitter
+
+    def remember(self, task_type: str, population: Population) -> None:
+        self._store[task_type] = population
+
+    def has(self, task_type: str) -> bool:
+        return task_type in self._store
+
+    def init_population(self, task_type: str, key: jax.Array,
+                        group_size: int, num_accels: int) -> Optional[Population]:
+        """Warm-started population, or None if this task type is unseen."""
+        cached = self._store.get(task_type)
+        if cached is None:
+            return None
+        P, G = cached.accel.shape
+        if G != group_size:
+            return None  # different group size: fall back to random init
+        kp, kj = jax.random.split(key)
+        accel = jnp.minimum(cached.accel, num_accels - 1)
+        prio = jnp.clip(cached.prio + self.jitter *
+                        jax.random.normal(kj, cached.prio.shape), 0.0, 0.999)
+        return Population(accel=accel, prio=prio.astype(jnp.float32))

@@ -1,0 +1,25 @@
+"""Analytical cost models for sub-accelerators.
+
+Two families:
+  - ``maestro``: a MAESTRO-like model of PE-array sub-accelerators with
+    HB (NVDLA-style, weight-stationary, channel-parallel) and LB
+    (Eyeriss-style, row-stationary, activation-parallel) dataflows.
+    Used by the paper-faithful reproduction experiments (S1-S6).
+  - ``tpu``: a TPU-v5e-native model (MXU / VMEM / HBM / ICI terms) used
+    when MAGMA schedules real JAX jobs across TPU submeshes.
+
+Both expose the paper's two quantities per (job, sub-accelerator):
+  no-stall latency  — latency assuming sufficient memory bandwidth
+  required bandwidth — minimum BW for the job to stay compute-bound
+"""
+from repro.costmodel.layers import LayerDesc, conv2d, dwconv2d, fc, attention_fcs
+from repro.costmodel.accelerators import (
+    SubAccelConfig, AcceleratorConfig, SETTINGS, get_setting)
+from repro.costmodel.maestro import MaestroModel
+from repro.costmodel.tpu import TPUChipModel, TPUSubmesh, V5E
+
+__all__ = [
+    "LayerDesc", "conv2d", "dwconv2d", "fc", "attention_fcs",
+    "SubAccelConfig", "AcceleratorConfig", "SETTINGS", "get_setting",
+    "MaestroModel", "TPUChipModel", "TPUSubmesh", "V5E",
+]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  makespan         the paper's M3E fitness evaluation (BW-allocator event
+                   simulation over whole populations)
+  flash_attention  causal GQA / sliding-window attention (prefill + train)
+  ssm_scan         Mamba-1/2 chunked selective scan
+
+Each kernel ships a jit'd wrapper (``ops``) and a pure-jnp oracle
+(``ref``); tests sweep shapes/dtypes in interpret mode against the oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: population-parallel BW-allocator event simulation.
+
+The M3E fitness evaluation (Algorithm 1 of the paper) is the optimization
+hot-loop: every MAGMA generation simulates `P` candidate schedules of `G`
+jobs on `A` sub-accelerators sharing the system bandwidth.  The paper's
+Python implementation costs 0.25 s per 100-individual epoch; this kernel
+evaluates a whole population block per grid cell with the job tables
+resident in VMEM.
+
+TPU-codesign notes:
+  - Pointer-chasing is replaced by one-hot selection over the queue axis
+    (`G` lanes): ``pick(q, ptr) = sum(q * (iota == ptr))`` — dense VPU work
+    instead of a gather, which is the TPU-native formulation of the event
+    loop.
+  - The grid tiles the population (PB individuals per cell); each cell's
+    working set is 2 x (PB, A, G) f32 queue tables — e.g. 8x8x128 tiles are
+    512 KB, far under a v5e core's VMEM.
+  - One event per `fori_loop` step: exactly one job completes per iteration
+    (ties drain through zero-dt steps), so G iterations simulate the group.
+
+The jnp reference is ``repro.core.bw_allocator.simulate_population`` and the
+float64 oracle is ``simulate_numpy``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TINY = 1e-30
+_INF = 3e38
+
+
+def _makespan_kernel(qlat_ref, qbw_ref, count_ref, bwsys_ref, out_ref,
+                     *, n_events: int):
+    qlat = qlat_ref[...]                 # (PB, A, G) f32
+    qbw = qbw_ref[...]                   # (PB, A, G) f32
+    count = count_ref[...]               # (PB, A) int32
+    bw_sys = bwsys_ref[0, 0]
+    PB, A, G = qlat.shape
+    qbytes = qlat * qbw
+    iota_g = jax.lax.broadcasted_iota(jnp.int32, (PB, A, G), 2)
+    iota_a = jax.lax.broadcasted_iota(jnp.int32, (PB, A), 1)
+
+    def pick(q, ptr):
+        sel = (iota_g == ptr[:, :, None]).astype(q.dtype)
+        return jnp.sum(q * sel, axis=2)                  # (PB, A)
+
+    ptr0 = jnp.zeros((PB, A), jnp.int32)
+    active0 = ptr0 < count
+    rem0 = jnp.where(active0, pick(qbytes, ptr0), 0.0)
+    t0 = jnp.zeros((PB,), jnp.float32)
+
+    def body(_, state):
+        t, rem, ptr = state
+        active = ptr < count
+        req = jnp.where(active, pick(qbw, ptr), 0.0)
+        total = jnp.sum(req, axis=1)                     # (PB,)
+        scale = jnp.minimum(1.0, bw_sys / jnp.maximum(total, _TINY))
+        alloc = req * scale[:, None]
+        runtime = jnp.where(active, rem / jnp.maximum(alloc, _TINY), _INF)
+        any_active = jnp.any(active, axis=1)
+        dt = jnp.where(any_active, jnp.min(runtime, axis=1), 0.0)
+        rem = jnp.maximum(rem - dt[:, None] * alloc, 0.0)
+        fin = jnp.argmin(runtime, axis=1)                # (PB,)
+        fin_oh = (iota_a == fin[:, None]) & any_active[:, None]
+        ptr = ptr + fin_oh.astype(jnp.int32)
+        nactive = ptr < count
+        nxt = pick(qbytes, ptr)
+        rem = jnp.where(fin_oh, jnp.where(nactive, nxt, 0.0), rem)
+        return (t + dt, rem, ptr)
+
+    t, _, _ = jax.lax.fori_loop(0, n_events, body, (t0, rem0, ptr0))
+    out_ref[...] = t[:, None]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("pop_block", "interpret"))
+def makespan_pallas(qlat, qbw, count, bw_sys, *, pop_block: int = 8,
+                    interpret: bool = True):
+    """qlat/qbw: (P, A, G) f32 per-queue-slot tables; count: (P, A) int32;
+    returns (P,) makespans."""
+    P, A, G = qlat.shape
+    n_events = G
+    Pp = _round_up(max(P, 1), pop_block)
+    Ap = _round_up(A, 8)
+    Gp = _round_up(G, 128)
+    qlat = jnp.pad(qlat, ((0, Pp - P), (0, Ap - A), (0, Gp - G)))
+    qbw = jnp.pad(qbw, ((0, Pp - P), (0, Ap - A), (0, Gp - G)),
+                  constant_values=1e-3)
+    count = jnp.pad(count, ((0, Pp - P), (0, Ap - A)))
+    bw_arr = jnp.full((1, 1), bw_sys, jnp.float32)
+
+    out = pl.pallas_call(
+        functools.partial(_makespan_kernel, n_events=n_events),
+        grid=(Pp // pop_block,),
+        in_specs=[
+            pl.BlockSpec((pop_block, Ap, Gp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pop_block, Ap, Gp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((pop_block, Ap), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((pop_block, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
+        interpret=interpret,
+    )(qlat, qbw, count, bw_arr)
+    return out[:P, 0]

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the tests' source of truth).
+
+Each oracle is the straightforward dense implementation of the kernel's
+contract, written for clarity over speed.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def population_makespan_ref(accel, prio, lat, bw, bw_sys, num_accels: int):
+    """Event-simulation oracle == core.bw_allocator.simulate_population."""
+    from repro.core.bw_allocator import simulate_population
+    return simulate_population(accel, prio, jnp.asarray(lat, jnp.float32),
+                               jnp.asarray(bw, jnp.float32), bw_sys,
+                               num_accels)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """Dense softmax attention.  q: (B,S,Hq,D), k/v: (B,S,Hkv,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(x, dt, A, B, C):
+    """Time-major scan oracle == models.mamba.selective_scan."""
+    from repro.models.mamba import selective_scan
+    return selective_scan(x, dt, A, B, C)

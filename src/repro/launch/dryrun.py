@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+#   init.  This module is the ONLY place the 512 placeholder devices exist;
+#   tests/benchmarks see the real single CPU device.
+#
+# Multi-pod dry-run driver (deliverable e):
+#   for every (architecture x input shape) cell, build the production mesh
+#   (single-pod 16x16 or multi-pod 2x16x16), lower + compile the train or
+#   serve step with full sharding, and record:
+#     - compiled.memory_analysis()  (bytes/device — proves it fits)
+#     - compiled.cost_analysis()    (per-device flops/bytes)
+#     - collective schedule         (trip-count-aware HLO parse)
+#     - global HLO FLOPs/bytes      (unrolled lowering, no compile)
+#     - the three roofline terms + MODEL_FLOPS ratio (launch.roofline)
+#
+#   python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+#   python -m repro.launch.dryrun --all [--multi-pod] [--outdir ...]
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh, model_axis_size
+from repro.launch.roofline import RooflineTerms, analyze_hlo
+from repro.launch import shardings as sh
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.models.registry import (
+    decode_input_specs, get_model, model_bytes, model_flops,
+    prefill_input_specs, shape_applicable, sharding_rules, train_input_specs)
+from repro.train.loop import TrainConfig, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# step builders: (jitted fn, example args) per shape kind
+# ---------------------------------------------------------------------------
+def build_train(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                train_config: Optional[TrainConfig] = None):
+    model = get_model(cfg)
+    state_sds, state_sh = sh.train_state_shardings(model, mesh)
+    specs = train_input_specs(cfg, shape)
+    bsh = sh.batch_shardings(specs, mesh)
+    step = make_train_step(model, train_config or TrainConfig())
+    fn = jax.jit(step, in_shardings=(state_sh, bsh),
+                 out_shardings=(state_sh, None), donate_argnums=0)
+    return fn, (state_sds, specs)
+
+
+def build_decode(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    model = get_model(cfg)
+    values_sds, values_sh = sh.param_shardings(model, mesh)
+    cache_sds, tok_sds, pos_sds = decode_input_specs(cfg, shape, model)
+    cache_sh = sh.cache_shardings(cache_sds, mesh)
+    tok_sh = sh.named(mesh, P(sh.batch_axes(mesh), None), tok_sds.shape)
+    rep = NamedSharding(mesh, P())
+
+    def step(values, cache, tokens, pos):
+        return model.decode_step(values, cache, tokens, pos)
+
+    fn = jax.jit(step,
+                 in_shardings=(values_sh, cache_sh, tok_sh, rep),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=1)
+    return fn, (values_sds, cache_sds, tok_sds, pos_sds)
+
+
+def build_prefill(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    model = get_model(cfg)
+    values_sds, values_sh = sh.param_shardings(model, mesh)
+    specs = prefill_input_specs(cfg, shape)
+    bsh = sh.batch_shardings(specs, mesh)
+
+    if cfg.family == "encdec":
+        def step(values, batch):
+            return model.init_cache(values, batch["frames"], shape.seq_len)
+    else:
+        def step(values, batch):
+            return model.prefill(values, batch, shape.seq_len)
+
+    fn = jax.jit(step, in_shardings=(values_sh, bsh))
+    return fn, (values_sds, specs)
+
+
+BUILDERS = {"train": build_train, "decode": build_decode,
+            "prefill": build_prefill}
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             with_flops: bool = True, cfg_override=None,
+             train_config: Optional[TrainConfig] = None,
+             verbose: bool = True) -> dict:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "ok": False}
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        rec.update(skipped=True, skip_reason=skip, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sharding_rules(cfg, model_axis_size(mesh))
+    chips = mesh.size
+    try:
+        t0 = time.perf_counter()
+        with mesh, use_mesh(mesh, rules):
+            if shape.kind == "train" and train_config is not None:
+                fn, args = build_train(cfg, shape, mesh, train_config)
+            else:
+                fn, args = BUILDERS[shape.kind](cfg, shape, mesh)
+            lowered = fn.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        hlo = analyze_hlo(txt)
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2),
+            mem_args_gib=round(ma.argument_size_in_bytes / 2**30, 4),
+            mem_temp_gib=round(ma.temp_size_in_bytes / 2**30, 4),
+            mem_out_gib=round(ma.output_size_in_bytes / 2**30, 4),
+            mem_alias_gib=round(ma.alias_size_in_bytes / 2**30, 4),
+            per_device_flops=ca.get("flops", 0.0),
+            per_device_bytes=ca.get("bytes accessed", 0.0),
+            collective_bytes_per_chip=hlo["collective_bytes"],
+            hbm_bytes_per_chip=hlo["hbm_bytes_est"],
+            collectives=hlo["collectives_by_op"],
+            collective_counts=hlo["collective_counts"],
+        )
+        del compiled, lowered, txt
+    except Exception as e:                       # noqa: BLE001
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        return rec
+
+    # global FLOPs/bytes: unrolled lowering, no compile (see roofline.py).
+    # Total FLOPs are microbatch-invariant, but a microbatch scan body is
+    # counted once by HloCostAnalysis — so the FLOPs lowering always uses
+    # microbatches=1.
+    if with_flops:
+        try:
+            ucfg = cfg.replace(scan_layers=False)
+            with mesh, use_mesh(mesh, rules):
+                if shape.kind == "train" and train_config is not None:
+                    tc1 = dataclasses.replace(train_config, microbatches=1)
+                    fn, args = build_train(ucfg, shape, mesh, tc1)
+                else:
+                    fn, args = BUILDERS[shape.kind](ucfg, shape, mesh)
+                lca = fn.lower(*args).cost_analysis() or {}
+            rec["hlo_flops_global"] = lca.get("flops", 0.0)
+            rec["hlo_bytes_global"] = lca.get("bytes accessed", 0.0)
+        except Exception as e:                   # noqa: BLE001
+            rec["flops_error"] = f"{type(e).__name__}: {e}"
+
+    mf = model_flops(cfg, shape)
+    mb = model_bytes(cfg, shape)
+    rec["model_flops"] = mf
+    rec["model_bytes"] = mb
+    if rec.get("hlo_flops_global"):
+        terms = RooflineTerms(
+            chips=chips,
+            hlo_flops=rec["hlo_flops_global"],
+            hbm_bytes_per_chip=rec["hbm_bytes_per_chip"],
+            collective_bytes_per_chip=rec["collective_bytes_per_chip"],
+            model_flops=mf, model_bytes=mb).finalize()
+        rec["roofline"] = terms.to_dict()
+    if verbose:
+        r = rec.get("roofline", {})
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {rec['mesh']:8s} "
+              f"compile={rec.get('compile_s', 0):6.1f}s "
+              f"temp={rec.get('mem_temp_gib', 0):7.2f}GiB "
+              f"dom={r.get('dominant', '?'):10s} "
+              f"frac={r.get('roofline_fraction', 0):.3f}", flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-flops", action="store_true",
+                    help="skip the unrolled FLOPs lowering")
+    ap.add_argument("--outdir", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+            path = os.path.join(args.outdir, tag + ".json")
+            if os.path.exists(path):
+                print(f"[dryrun] cached {tag}")
+                continue
+            rec = run_cell(arch, shape, multi_pod=mp,
+                           with_flops=not args.no_flops)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if not rec["ok"]:
+                print(f"[dryrun] FAILED {tag}: {rec.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

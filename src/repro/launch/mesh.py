@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax use.
+
+Single pod:  (16, 16)   ("data", "model")   = 256 chips
+Multi pod:   (2, 16, 16) ("pod", "data", "model") = 512 chips
+
+The model axis (16) carries TP/EP/sequence-sharded KV; data carries
+FSDP + batch; pod is pure data parallelism across the DCN boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_plan(plan):
+    """Mesh from a fault-tolerance MeshPlan (elastic restart path)."""
+    return jax.make_mesh(
+        plan.shape, plan.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.shape))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,312 @@
+"""Roofline-term extraction from dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+  compute term    = HLO_FLOPs / (chips x 197e12)
+  memory term     = HLO_bytes / (chips x 819e9)
+  collective term = per-chip collective bytes / 50e9 (one ICI link)
+                    (== global collective bytes / (chips x link_bw))
+
+Sources and the scan caveat:
+  - XLA's HloCostAnalysis visits each instruction ONCE — a scan-over-layers
+    body is counted a single time regardless of trip count.  FLOPs/bytes
+    therefore come from lowering the model with ``scan_layers=False``
+    (unrolled, global shapes, pre-partitioning; lowering is cheap — no
+    compile needed) via ``lowered.cost_analysis()``.  This also counts
+    remat recompute, which is exactly what the MODEL_FLOPS/HLO_FLOPs ratio
+    is meant to expose.
+  - Collective bytes come from the *compiled, partitioned* (scanned) HLO
+    text: every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute op's output bytes, with ops inside ``while`` bodies
+    multiplied by the loop's ``known_trip_count`` (nested loops compose).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import Counter, defaultdict
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_RE = re.compile(r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\]\S*))\s+(%?[\w\-]+)\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+_NON_HBM_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter",
+                "constant", "after-all", "partition-id", "replica-id",
+                "iota", "get-dimension-size", "opt-barrier",
+                # loop/branch wrappers: their bodies are counted directly
+                "while", "conditional", "call"}
+
+# ops that update a buffer in place: traffic = update operand, not output
+_INPLACE_OPS = {"dynamic-update-slice"}
+_OPERAND_SHAPES_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """Fusion- and trip-count-aware traffic analysis of compiled HLO text.
+
+    Two per-chip quantities:
+      - collective bytes by op kind (ops inside ``while`` bodies multiplied
+        by the loop's known_trip_count; nested loops compose), and
+      - an HBM-traffic estimate: output bytes of every *schedule-level* op
+        (entry + while bodies/conds).  Ops inside fusion computations never
+        touch HBM — post-fusion buffer outputs are written once and read
+        ~once downstream, so traffic ~= 2 x outputs + parameter reads.
+    """
+    comp_of_line = []
+    current = "__toplevel__"
+    comps: Dict[str, list] = defaultdict(list)
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            current = m.group(1)
+        comps[current].append(line)
+        if line.strip() == "}":
+            current = "__toplevel__"
+
+    edges = []
+    for comp, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                edges.append((comp, wm.group(2), trips))
+                edges.append((comp, wm.group(1), trips))
+
+    mult: Dict[str, float] = {c: 1.0 for c in comps}
+    schedule_level = {c for c in comps
+                      if "main" in c or "entry" in c.lower()}
+    changed, iters = True, 0
+    while changed and iters < 50:
+        changed, iters = False, iters + 1
+        for parent, body, trips in edges:
+            if parent in schedule_level and body not in schedule_level:
+                schedule_level.add(body)
+                changed = True
+            want = mult[parent] * trips
+            if body in schedule_level and mult.get(body) != want:
+                mult[body] = want
+                changed = True
+
+    # pre-pass: fusions whose body performs dynamic-update-slice alias
+    # their buffer in place — credit (full - update) bytes back
+    def _dus_update_bytes(line, start):
+        shapes = _SHAPE_RE.findall(line[start:])
+        if len(shapes) >= 2:
+            dt2, dims2 = shapes[1]
+            n = 1
+            for dd in (dims2.split(",") if dims2 else []):
+                n *= int(dd)
+            return n * _DTYPE_BYTES.get(dt2, 4)
+        return 0
+
+    dus_saving: Dict[str, float] = {}
+    for comp, lines in comps.items():
+        saved = 0.0
+        for line in lines:
+            if " dynamic-update-slice(" not in line:
+                continue
+            om = _OP_RE.search(line)
+            if not om:
+                continue
+            full = shape_bytes(om.group(1))
+            upd = _dus_update_bytes(line, om.end())
+            saved += max(full - upd, 0.0)
+        if saved:
+            dus_saving[comp] = saved
+
+    _CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+
+    by_op: Dict[str, float] = defaultdict(float)
+    counts: Counter = Counter()
+    hbm_out = 0.0
+    param_bytes = 0.0
+    for comp, lines in comps.items():
+        if comp not in schedule_level:
+            continue
+        m = mult[comp]
+        for line in lines:
+            om = _OP_RE.search(line)
+            if not om:
+                continue
+            shape_str, opname = om.groups()
+            opname = opname.lstrip("%")
+            base = re.sub(r"[\.\d]+$", "", opname)
+            base = base.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                by_op[base] += shape_bytes(shape_str) * m
+                counts[base] += int(m)
+            if base == "parameter" and comp != "__toplevel__":
+                if m == 1.0:       # entry params = weights/optimizer reads
+                    param_bytes += shape_bytes(shape_str)
+                continue
+            if base in _INPLACE_OPS:
+                hbm_out += _dus_update_bytes(line, om.end()) * m
+                continue
+            if base == "fusion":
+                cm = _CALLS_RE.search(line[om.end():])
+                out_b = shape_bytes(shape_str)
+                if cm and cm.group(1) in dus_saving:
+                    out_b = max(out_b - dus_saving[cm.group(1)], 0.0)
+                hbm_out += out_b * m
+                continue
+            if base not in _NON_HBM_OPS:
+                hbm_out += shape_bytes(shape_str) * m
+    return {
+        "collectives_by_op": dict(by_op),
+        "collective_bytes": float(sum(by_op.values())),
+        "collective_counts": dict(counts),
+        "hbm_bytes_est": 2.0 * hbm_out + param_bytes,
+        "param_bytes": param_bytes,
+    }
+
+
+def parse_collectives(hlo_text: str) -> Tuple[Dict[str, float], float, Counter]:
+    """Trip-count-aware per-chip collective bytes from compiled HLO text.
+
+    Returns ({op: bytes}, total_bytes, op counts)."""
+    # 1. split into computations
+    comp_of_line = []
+    current = "__toplevel__"
+    comps: Dict[str, list] = defaultdict(list)
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            current = m.group(1)
+        comps[current].append(line)
+        if line.strip() == "}":
+            current = "__toplevel__"
+
+    # 2. while -> (body, trip count) edges
+    edges = []   # (parent_comp, body_comp, trips)
+    for comp, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else 1
+                edges.append((comp, wm.group(2), trips))
+                edges.append((comp, wm.group(1), trips))
+
+    # 3. multiplier per computation (entry-reachable product of trips)
+    mult: Dict[str, float] = defaultdict(lambda: 1.0)
+    entry = next((c for c in comps if "main" in c or "entry" in c.lower()),
+                 None)
+    for c in comps:
+        mult[c] = 1.0
+    changed = True
+    iters = 0
+    while changed and iters < 50:
+        changed = False
+        iters += 1
+        for parent, body, trips in edges:
+            want = mult[parent] * trips
+            if mult[body] != want:
+                mult[body] = want
+                changed = True
+
+    # 4. per-computation collective bytes
+    by_op: Dict[str, float] = defaultdict(float)
+    counts: Counter = Counter()
+    for comp, lines in comps.items():
+        m = mult[comp]
+        for line in lines:
+            om = _OP_RE.search(line)
+            if not om:
+                continue
+            shape_str, opname = om.groups()
+            opname = opname.lstrip("%")
+            base = re.sub(r"[\.\d]+$", "", opname)
+            # normalize e.g. all-gather-start
+            base = base.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES:
+                by_op[base] += shape_bytes(shape_str) * m
+                counts[base] += int(m)
+    total = float(sum(by_op.values()))
+    return dict(by_op), total, counts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    chips: int
+    hlo_flops: float             # global (unrolled lowering)
+    hbm_bytes_per_chip: float    # fusion+trip-count-aware compiled estimate
+    collective_bytes_per_chip: float
+    model_flops: float
+    model_bytes: float = 0.0     # model-essential HBM floor (global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+
+    def finalize(self) -> "RooflineTerms":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS)
+        self.memory_s = self.hbm_bytes_per_chip / HBM_BW
+        self.collective_s = self.collective_bytes_per_chip / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        return self
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["step_time_s"] = self.step_time_s
+        d["ideal_time_s"] = self.ideal_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time (no overlap assumption: max of terms)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def ideal_time_s(self) -> float:
+        """Achievable floor: the slower of the model-essential compute and
+        model-essential HBM traffic (decode is legitimately memory-bound —
+        its floor is the bytes term, not the FLOPs term)."""
+        c = self.model_flops / (self.chips * PEAK_FLOPS)
+        m = self.model_bytes / (self.chips * HBM_BW)
+        return max(c, m)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """ideal_time / step_time: fraction of the achievable roofline this
+        lowering reaches (1.0 = every HLO flop/byte/collective is either
+        model-essential or hidden)."""
+        return self.ideal_time_s / self.step_time_s if self.step_time_s \
+            else 0.0

@@ -1,0 +1,75 @@
+"""Multi-tenant serving launcher — MAGMA as the production scheduler.
+
+    python -m repro.launch.serve --tenants granite-3-2b,qwen2-moe-a2.7b \
+        --requests 24 [--method magma] [--execute]
+
+Builds smoke-size tenants (CPU container; the identical path drives real
+TPU submeshes), synthesizes a batched request mix, schedules the job group
+with the chosen mapper (MAGMA by default; any Table-IV method via
+--method), prints the makespan/throughput vs. the Herald-like and
+AI-MT-like baselines, and optionally executes the schedule for real.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import module
+from repro.models.registry import get_model
+from repro.serve.engine import MultiTenantEngine, Tenant, default_submeshes
+
+
+def build_tenants(arch_ids, seed: int = 0):
+    tenants = []
+    for i, arch in enumerate(arch_ids):
+        cfg = get_smoke_config(arch).replace(dtype="float32")
+        model = get_model(cfg)
+        values, _ = module.split(model.init(jax.random.PRNGKey(seed + i)))
+        tenants.append(Tenant(arch, cfg, values, model))
+    return tenants
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", default="granite-3-2b,qwen2-moe-a2.7b,"
+                                         "falcon-mamba-7b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--method", default="magma")
+    ap.add_argument("--budget", type=int, default=2000)
+    ap.add_argument("--execute", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    arch_ids = [a for a in args.tenants.split(",") if a in ARCH_IDS]
+    tenants = build_tenants(arch_ids, args.seed)
+    engine = MultiTenantEngine(tenants, default_submeshes(),
+                               budget=args.budget, seed=args.seed)
+
+    rng = np.random.default_rng(args.seed)
+    reqs = [(arch_ids[i % len(arch_ids)],
+             int(rng.integers(64, 512)), int(rng.integers(16, 64)))
+            for i in range(args.requests)]
+    jobs = engine.jobs_for_requests(reqs)
+    print(f"[serve] {len(reqs)} requests -> {len(jobs)} jobs on "
+          f"{len(engine.submeshes)} submeshes")
+
+    for method in (args.method, "herald_like", "ai_mt_like"):
+        out = engine.schedule(jobs, method=method)
+        print(f"[serve] {method:12s} makespan={out['makespan_s']*1e3:8.2f} ms"
+              f"  throughput={out['throughput_flops']/1e12:8.2f} TFLOP/s")
+
+    if args.execute:
+        out = engine.schedule(jobs, method=args.method)
+        prompts = {j.uid: rng.integers(
+            0, min(t.cfg.vocab for t in tenants), (1, j.seq))
+            for j in jobs if j.phase == "prefill"}
+        gen = engine.execute(jobs, out["queues"], prompts)
+        print(f"[serve] executed {len(gen)} decode jobs; "
+              f"sample tokens: {list(gen.values())[0][:, :8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Sharding assembly for train/serve steps on the production mesh.
+
+Builds (ShapeDtypeStructs, NamedShardings) pairs for:
+  - TrainState (params from logical axes; AdamW moments mirror params)
+  - input batches (batch dim over (pod, data))
+  - KV / SSM caches (path-pattern rules: kv_seq over 'model',
+    batch over (pod, data); non-divisible dims auto-replicated)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import batch_axes, logical_to_spec, \
+    shardings_for_axes
+from repro.models import module
+from repro.train.loop import TrainState, init_state
+from repro.train.optimizer import AdamState
+
+
+def _drop_nondivisible(spec: P, shape, mesh: Mesh) -> P:
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def named(mesh: Mesh, spec: P, shape=None) -> NamedSharding:
+    if shape is not None:
+        spec = _drop_nondivisible(spec, shape, mesh)
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(specs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh):
+    b = batch_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        spec = P(b, *([None] * (v.ndim - 1)))
+        out[k] = named(mesh, spec, v.shape)
+    return out
+
+
+def train_state_shardings(model, mesh: Mesh) -> Tuple[TrainState, TrainState]:
+    """(state ShapeDtypeStructs, state NamedShardings)."""
+    state_sds = jax.eval_shape(
+        lambda: init_state(model, jax.random.PRNGKey(0)))
+    tree_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    _, axes = module.split(tree_sds)
+    param_sh = shardings_for_axes(axes, mesh, shape_tree=state_sds.params)
+    rep = NamedSharding(mesh, P())
+    state_sh = TrainState(step=rep, params=param_sh,
+                          opt=AdamState(step=rep, mu=param_sh, nu=param_sh))
+    return state_sds, state_sh
+
+
+def param_shardings(model, mesh: Mesh):
+    tree_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    values_sds, axes = module.split(tree_sds)
+    return values_sds, shardings_for_axes(axes, mesh, shape_tree=values_sds)
+
+
+def cache_shardings(cache_sds, mesh: Mesh):
+    """Path-pattern shardings for decode caches.
+
+    rank-5 (L, B, C, Kh, hd)  k/v rings + cross KV: batch->data, C->model
+    rank-3 (L, B, C)          ring positions:        batch->data, C->model
+    rank-4 'conv' (L,B,W-1,Di): batch->data, Di->model
+    rank-4 'ssm'  (L,B,Di,N):   batch->data, Di->model
+    """
+    b = batch_axes(mesh)
+
+    def one(path, leaf):
+        keys = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        if leaf.ndim == 5:
+            spec = P(None, b, "model", None, None)
+        elif leaf.ndim == 3:
+            spec = P(None, b, "model")
+        elif leaf.ndim == 4 and "conv" in keys:
+            spec = P(None, b, None, "model")
+        elif leaf.ndim == 4:
+            spec = P(None, b, "model", None)
+        else:
+            spec = P()
+        return named(mesh, spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+def logits_sharding(mesh: Mesh, shape):
+    return named(mesh, P(batch_axes(mesh), None, "model"), shape)

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import get_model, MODEL_FAMILIES
+
+__all__ = ["ModelConfig", "get_model", "MODEL_FAMILIES"]

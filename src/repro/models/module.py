@@ -1,0 +1,113 @@
+"""Minimal functional module system: param pytrees + logical sharding axes.
+
+Params are nested dicts whose leaves are ``Param`` pytree nodes carrying a
+tuple of *logical axis names* as static metadata (MaxText-style).  After
+init, ``split`` separates the value tree from the axes tree; the axes tree
+is mapped to concrete ``PartitionSpec``s by the rules in
+``repro.dist.sharding``.
+
+Everything is jit/eval_shape friendly — ``jax.eval_shape(init)`` yields the
+same tree with ShapeDtypeStruct values, which is how the 512-device dry-run
+builds sharded ShapeDtypeStructs without allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any                      # jnp array or ShapeDtypeStruct
+    axes: Tuple[Optional[str], ...]  # one logical name (or None) per dim
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split(tree):
+    """Param tree -> (value tree, axes tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+def normal_init(key, shape, dtype, stddev: float = 0.02):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def scaled_init(fan_in: int):
+    def init(key, shape, dtype):
+        return normal_init(key, shape, dtype, stddev=fan_in ** -0.5)
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+class KeyGen:
+    """Splittable key stream so init code reads linearly."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+
+def param(keygen: KeyGen, shape, axes, dtype=jnp.bfloat16,
+          init: Callable = None, stddev: float = 0.02) -> Param:
+    assert len(shape) == len(axes), (shape, axes)
+    if init is None:
+        value = normal_init(keygen(), shape, dtype, stddev)
+    else:
+        value = init(keygen(), shape, dtype)
+    return Param(value, tuple(axes))
+
+
+def scan_or_unroll(body, carry, xs, use_scan: bool = True):
+    """``lax.scan`` or a python-unrolled equivalent (same signature).
+
+    Unrolling exists for the dry-run's cost analysis: XLA's HloCostAnalysis
+    visits a while-loop body once, so FLOPs of scanned layers are invisible;
+    lowering the unrolled variant exposes them (see launch.roofline)."""
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def count_params(values) -> int:
+    return sum(int(jnp.size(v)) if not isinstance(v, jax.ShapeDtypeStruct)
+               else int(jnp.prod(jnp.array(v.shape)))
+               for v in jax.tree.leaves(values))

@@ -1,0 +1,209 @@
+"""Architecture registry: config -> model object, per-arch sharding rules,
+dry-run input specs, and analytic FLOPs/param counts for the roofline.
+
+The 10 assigned architectures are declared in ``repro.configs``; this module
+is the single place that knows which family class serves which config and
+how each (shape x arch) cell is lowered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models import module
+from repro.models.transformer import TransformerLM, EncDecLM
+from repro.models.mamba import MambaLM, HybridLM
+
+MODEL_FAMILIES = {
+    "dense": TransformerLM,
+    "moe": TransformerLM,
+    "vlm": TransformerLM,
+    "encdec": EncDecLM,
+    "ssm": MambaLM,
+    "hybrid": HybridLM,
+}
+
+
+def get_model(cfg: ModelConfig):
+    return MODEL_FAMILIES[cfg.family](cfg)
+
+
+# ---------------------------------------------------------------------------
+# per-arch sharding rule overrides (divisibility-driven)
+# ---------------------------------------------------------------------------
+def sharding_rules(cfg: ModelConfig, model_axis: int = 16) -> Dict[str, object]:
+    """Pick TP axes that divide this arch's dims.
+
+    - heads: shard over 'model' when divisible (all archs but phi3);
+      otherwise shard head_dim (phi3: 40 heads, hd=128 -> contraction-dim TP).
+    - kv_heads: shard when divisible (qwen/moonshot/seamless kv=16);
+      otherwise replicated (kv projections are small).
+    """
+    rules: Dict[str, object] = {}
+    if not cfg.fsdp:
+        rules["embed"] = None      # replicate weights across 'data'
+    if cfg.attn_batch_shard:
+        rules["attn_batch"] = ("pod", "data", "model")
+        rules["heads"] = None
+        rules["head_dim"] = None
+    elif cfg.n_heads and cfg.n_heads % model_axis != 0:
+        rules["heads"] = None
+        if cfg.hd % model_axis == 0:
+            rules["head_dim"] = "model"
+    if cfg.n_kv_heads and cfg.n_kv_heads % model_axis == 0:
+        rules["kv_heads"] = "model"
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    """None if (arch, shape) is runnable, else the documented skip reason."""
+    if shape.name == "long_500k":
+        sub_quadratic = (cfg.family in ("ssm", "hybrid")
+                         or cfg.sliding_window > 0)
+        if not sub_quadratic:
+            return ("full quadratic attention; long_500k requires a "
+                    "sub-quadratic path (skip per assignment)")
+    return None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype_jnp
+    if cfg.family == "vlm":
+        P = cfg.num_prefix_embeds
+        return {"embeds": _sds((B, P, cfg.d_model), dt),
+                "tokens": _sds((B, S - P), jnp.int32),
+                "labels": _sds((B, S - P), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model), dt),
+                "tokens": _sds((B, S), jnp.int32),
+                "labels": _sds((B, S), jnp.int32)}
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    dt = cfg.dtype_jnp
+    if cfg.family == "vlm":
+        P = cfg.num_prefix_embeds
+        return {"embeds": _sds((B, P, cfg.d_model), dt),
+                "tokens": _sds((B, S - P), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds((B, S, cfg.d_model), dt)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None):
+    """(cache_specs, tokens_spec, pos_spec) for one decode step."""
+    model = model or get_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        values_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        values_sds, _ = module.split(values_sds)
+        frames = _sds((B, cfg.num_prefix_embeds, cfg.d_model), cfg.dtype_jnp)
+        cache = jax.eval_shape(lambda v, f: model.init_cache(v, f, S),
+                               values_sds, frames)
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, tokens, pos
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (the roofline's MODEL_FLOPS = 6 N D term)
+# ---------------------------------------------------------------------------
+def count_params(cfg: ModelConfig) -> int:
+    model = get_model(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    values, _ = module.split(tree)
+    return int(sum(np.prod(v.shape) for v in jax.tree.leaves(values)))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Params touched per token (MoE: top_k of n_experts routed)."""
+    total = count_params(cfg)
+    if cfg.n_experts == 0:
+        return total
+    model = get_model(cfg)
+    tree = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    values, _ = module.split(tree)
+    moe_leaf_names = ("w_gate", "w_up", "w_down")
+    routed = 0
+    lyr = values["layers"]
+    if "moe" in lyr:
+        for name in moe_leaf_names:
+            routed += int(np.prod(getattr(lyr["moe"], name).shape))
+    active_routed = routed * cfg.top_k / max(cfg.n_experts, 1)
+    return int(total - routed + active_routed)
+
+
+def model_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Model-essential HBM bytes per step — the memory-roofline floor.
+
+    train:   AdamW update touches every param: read p(bf16) + m,v(f32),
+             write same -> 20 B/param; plus grads r/w (4+4) and the
+             per-layer checkpointed activations (write fwd + read bwd).
+    decode:  read active params (bf16) once per token + read the KV/SSM
+             state once; write one KV slot (negligible).
+    prefill: read params once + stream activations through every layer.
+    """
+    n_total = count_params(cfg)
+    n_active = count_active_params(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    n_layers = cfg.num_layers + cfg.encoder_layers
+    if shape.kind == "train":
+        act = 2 * 2 * B * S * d * n_layers          # ckpt stack w + r, bf16
+        return float(28.0 * n_total + act)
+    if shape.kind == "prefill":
+        act = 2 * 2 * B * S * d * n_layers
+        return float(2.0 * n_total + act)
+    # decode: params + full KV/state read per emitted token
+    if cfg.n_heads and cfg.family not in ("ssm",):
+        eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        n_attn = (math.ceil(cfg.num_layers / cfg.shared_attn_every)
+                  if cfg.family == "hybrid" else n_layers)
+        kv = 2 * n_attn * B * eff * max(cfg.n_kv_heads, 1) * cfg.hd * 2
+    else:
+        kv = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        kv += cfg.num_layers * B * cfg.inner * cfg.ssm_state * 4
+    return float(2.0 * n_active + kv)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6 * N_active * tokens (train) or 2 * N_active * tokens (inference),
+    plus the quadratic attention term where applicable."""
+    n_active = count_active_params(cfg)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    flops = mult * n_active * tokens
+    # attention score/context FLOPs (not in the 6N rule)
+    if cfg.n_heads:
+        S = shape.seq_len
+        eff = min(S, cfg.sliding_window) if cfg.sliding_window else S
+        if shape.kind == "decode":
+            att = 2 * 2 * shape.global_batch * cfg.n_heads * cfg.hd * eff
+        else:
+            att = 2 * 2 * shape.global_batch * cfg.n_heads * cfg.hd * S * eff / 2
+        n_attn_layers = (cfg.num_layers + cfg.encoder_layers
+                         if cfg.family == "encdec" else
+                         (math.ceil(cfg.num_layers / cfg.shared_attn_every)
+                          if cfg.family == "hybrid" else cfg.num_layers))
+        flops += (3.0 if shape.kind == "train" else 1.0) * att * n_attn_layers
+    return float(flops)

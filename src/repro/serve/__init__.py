@@ -1,0 +1,5 @@
+from repro.serve.engine import (
+    ServeJob, Submesh, Tenant, MultiTenantEngine, default_submeshes)
+
+__all__ = ["ServeJob", "Submesh", "Tenant", "MultiTenantEngine",
+           "default_submeshes"]

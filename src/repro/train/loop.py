@@ -1,0 +1,139 @@
+"""Training loop: jitted train step (loss -> grads -> clip -> AdamW),
+microbatched gradient accumulation, sharded state, checkpoint/restart.
+
+``make_train_step`` builds the pure step function used by both the live
+trainer and the 512-device dry-run (the dry-run lowers it with
+ShapeDtypeStructs).  Buffers are donated; parameters stay in the model
+dtype (bf16) with f32 AdamW moments (master-quality state), gradients are
+clipped by global norm.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import module
+from repro.train.optimizer import AdamW, AdamState, apply_updates, \
+    clip_by_global_norm, cosine_schedule
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    params: Any                # value tree (bf16/f32 leaves)
+    opt: AdamState
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1      # gradient accumulation chunks
+
+
+def init_state(model, key) -> TrainState:
+    tree = model.init(key)
+    values, _ = module.split(tree)
+    opt = AdamW(weight_decay=0.0).init(values)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=values, opt=opt)
+
+
+def make_train_step(model, tc: TrainConfig) -> Callable:
+    """Returns step(state, batch) -> (state, metrics)."""
+    opt = AdamW(weight_decay=tc.weight_decay)
+    lr_fn = cosine_schedule(tc.lr, tc.warmup_steps, tc.total_steps)
+
+    def loss_fn(values, batch):
+        loss, metrics = model.loss(values, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single_grads(values, batch):
+        (loss, metrics), grads = grad_fn(values, batch)
+        return loss, metrics, grads
+
+    def accumulated_grads(values, batch):
+        n = tc.microbatches
+
+        def reshape(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        micro = jax.tree.map(reshape, batch)
+
+        def body(carry, mb):
+            loss_a, grads_a = carry
+            (loss, metrics), grads = grad_fn(values, mb)
+            grads_a = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n, grads_a, grads)
+            return (loss_a + loss / n, grads_a), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), values)
+        (loss, grads), metrics = jax.lax.scan(
+            body, (jnp.float32(0.0), zeros), micro)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss, metrics, grads
+
+    def step(state: TrainState, batch) -> tuple:
+        if tc.microbatches > 1:
+            loss, metrics, grads = accumulated_grads(state.params, batch)
+        else:
+            loss, metrics, grads = single_grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        lr = lr_fn(state.step)
+        updates, opt_state = opt.update(grads, state.opt, state.params, lr=lr)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(step=state.step + 1, params=params,
+                               opt=opt_state)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return step
+
+
+def train(model, tc: TrainConfig, stream, steps: int, seed: int = 0,
+          state: Optional[TrainState] = None,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0,
+          log_every: int = 10,
+          log_fn=print) -> TrainState:
+    """Single-process training driver (tests/examples; the cluster path is
+    ``repro.launch.train``)."""
+    from repro.train import checkpoint as ckpt
+
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0,))
+    if state is None:
+        state = init_state(model, jax.random.PRNGKey(seed))
+        if checkpoint_dir:
+            latest = ckpt.find_latest(checkpoint_dir)
+            if latest is not None:
+                state = ckpt.restore(latest, like=state)
+                log_fn(f"[train] restored step {int(state.step)} from {latest}")
+
+    losses = []
+    t0 = time.perf_counter()
+    start = int(state.step)
+    for s in range(start, steps):
+        batch = stream.batch_at(s)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if log_every and (s + 1) % log_every == 0:
+            dt = (time.perf_counter() - t0) / max(s + 1 - start, 1)
+            log_fn(f"[train] step {s+1:5d} loss {losses[-1]:.4f} "
+                   f"gnorm {float(metrics['grad_norm']):.3f} "
+                   f"{dt*1e3:.0f} ms/step")
+        if checkpoint_dir and checkpoint_every and \
+                (s + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, state)
+    if checkpoint_dir:
+        ckpt.save(checkpoint_dir, state)
+    return state

@@ -1,0 +1,108 @@
+"""Pure-JAX optimizers (no optax dependency).
+
+Used by the training substrate (AdamW + cosine schedule + global-norm clip)
+and by the RL baseline mappers (Adam / RMSProp on small MLPs).  The API is
+optax-like: ``init(params) -> state``, ``update(grads, state, params) ->
+(updates, state)``; updates are *added* to params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: any
+    nu: any
+
+
+def _tree_zeros_like(params, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | None = None            # fixed lr; or pass schedule to update
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    # master-weight dtype for the moments; params may be bf16
+    state_dtype: any = jnp.float32
+
+    def init(self, params) -> AdamState:
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         mu=_tree_zeros_like(params, self.state_dtype),
+                         nu=_tree_zeros_like(params, self.state_dtype))
+
+    def update(self, grads, state: AdamState, params, lr: Optional[jnp.ndarray] = None):
+        lr = self.lr if lr is None else lr
+        step = state.step + 1
+        b1, b2, sd = self.b1, self.b2, self.state_dtype
+
+        mu = jax.tree.map(lambda g, m: b1 * m + (1 - b1) * g.astype(sd),
+                          grads, state.mu)
+        nu = jax.tree.map(lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(sd)),
+                          grads, state.nu)
+
+        def upd(m, v, p):
+            mhat = m / (1 - b1 ** step)
+            vhat = v / (1 - b2 ** step)
+            u = -lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                       + self.weight_decay * p.astype(sd))
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+
+class RMSPropState(NamedTuple):
+    nu: any
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSProp:
+    lr: float = 7e-4
+    decay: float = 0.99
+    eps: float = 1e-5
+
+    def init(self, params) -> RMSPropState:
+        return RMSPropState(nu=_tree_zeros_like(params))
+
+    def update(self, grads, state: RMSPropState, params=None, lr=None):
+        lr = self.lr if lr is None else lr
+        nu = jax.tree.map(lambda g, v: self.decay * v + (1 - self.decay) * jnp.square(g),
+                          grads, state.nu)
+        updates = jax.tree.map(lambda g, v: -lr * g / (jnp.sqrt(v) + self.eps),
+                               grads, nu)
+        return updates, RMSPropState(nu=nu)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr

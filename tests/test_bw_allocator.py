@@ -1,0 +1,83 @@
+"""BW Allocator (Algorithm 1): jnp scan vs float64 oracle + invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bw_allocator import (
+    simulate_numpy, simulate_population, throughput)
+from repro.core.encoding import decode_to_lists, random_population
+
+
+def _rand_tables(rng, G, A):
+    lat = rng.uniform(0.05, 5.0, (G, A))
+    bw = rng.uniform(0.01, 10.0, (G, A))
+    return lat, bw
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 6),
+       st.floats(0.5, 50.0), st.integers(0, 10_000))
+def test_scan_matches_numpy_oracle(G, A, bw_sys, seed):
+    rng = np.random.default_rng(seed)
+    lat, bw = _rand_tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(seed), 4, G, A)
+    ms = np.asarray(simulate_population(
+        pop.accel, pop.prio, jnp.asarray(lat, jnp.float32),
+        jnp.asarray(bw, jnp.float32), bw_sys, A))
+    for p in range(4):
+        queues = decode_to_lists(pop.accel[p], pop.prio[p], A)
+        want = simulate_numpy(queues, lat, bw, bw_sys)
+        assert ms[p] == pytest.approx(want, rel=2e-3), (p, ms[p], want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 20), st.integers(2, 4), st.integers(0, 10_000))
+def test_more_bandwidth_never_hurts(G, A, seed):
+    rng = np.random.default_rng(seed)
+    lat, bw = _rand_tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(seed), 2, G, A)
+    ms = []
+    for bw_sys in (1.0, 4.0, 1e9):
+        ms.append(np.asarray(simulate_population(
+            pop.accel, pop.prio, jnp.asarray(lat, jnp.float32),
+            jnp.asarray(bw, jnp.float32), bw_sys, A)))
+    assert np.all(ms[0] >= ms[1] - 1e-5)
+    assert np.all(ms[1] >= ms[2] - 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 4), st.integers(0, 10_000))
+def test_unlimited_bw_equals_queue_latency_sum(G, A, seed):
+    """With infinite system BW the makespan is the max per-queue latency sum."""
+    rng = np.random.default_rng(seed)
+    lat, bw = _rand_tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(seed), 1, G, A)
+    queues = decode_to_lists(pop.accel[0], pop.prio[0], A)
+    want = max((sum(lat[j, a] for j in q) for a, q in enumerate(queues)),
+               default=0.0)
+    got = float(simulate_population(
+        pop.accel, pop.prio, jnp.asarray(lat, jnp.float32),
+        jnp.asarray(bw, jnp.float32), 1e12, A)[0])
+    assert got == pytest.approx(want, rel=1e-3)
+
+
+def test_serial_single_accel():
+    """One accelerator, ample BW: makespan = sum of latencies."""
+    lat = np.array([[1.0], [2.0], [3.0]])
+    bw = np.ones((3, 1))
+    ms = simulate_numpy([[0, 1, 2]], lat, bw, bw_sys=100.0)
+    assert ms == pytest.approx(6.0)
+
+
+def test_bw_contention_slows_down():
+    """Two jobs each needing the full pipe, in parallel -> 2x slowdown."""
+    lat = np.array([[1.0, 1.0], [1.0, 1.0]])
+    bw = np.full((2, 2), 8.0)
+    ms = simulate_numpy([[0], [1]], lat, bw, bw_sys=8.0)
+    assert ms == pytest.approx(2.0, rel=1e-6)
+
+
+def test_throughput_objective():
+    assert float(throughput(100.0, jnp.float32(4.0))) == pytest.approx(25.0)

@@ -1,0 +1,84 @@
+"""Cost model trends must match the paper's Fig. 7 structure."""
+import numpy as np
+import pytest
+
+from repro.costmodel import MaestroModel, SubAccelConfig, get_setting
+from repro.costmodel.layers import conv2d, dwconv2d, fc
+from repro.costmodel.tpu import TPUSubmesh
+from repro.workloads import build_task_groups, model_layers
+from repro.core.job_analyzer import JobAnalyzer
+
+HB = SubAccelConfig("hb", pe_h=64, dataflow="HB", sg_bytes=291 * 1024)
+LB = SubAccelConfig("lb", pe_h=64, dataflow="LB", sg_bytes=218 * 1024)
+MODEL = MaestroModel()
+
+
+def _avg(job_list, sub, field):
+    vals = [getattr(MODEL.profile(l, sub), field) for l in job_list]
+    return float(np.mean(vals))
+
+
+def test_lb_slower_but_leaner_on_fc():
+    """Fig 7: LB has far higher latency but far lower BW on FC-heavy jobs."""
+    layers = [fc("a", 256, 768, 768), fc("b", 2048, 512, 512)]
+    for l in layers:
+        hb = MODEL.profile(l, HB)
+        lb = MODEL.profile(l, LB)
+        assert lb.no_stall_latency_s > hb.no_stall_latency_s
+        assert lb.required_bw < hb.required_bw
+
+
+def test_task_orderings_match_fig7():
+    """Vision: highest per-job latency; Recom: highest required BW (HB)."""
+    per_task = {}
+    for task in ("Vision", "Lang", "Recom"):
+        group = build_task_groups(task, group_size=60, seed=0)[0]
+        lats = [MODEL.profile(j.layer, HB).no_stall_latency_s
+                for j in group.jobs]
+        bws = [MODEL.profile(j.layer, HB).required_bw for j in group.jobs]
+        per_task[task] = (np.mean(lats), np.mean(bws))
+    assert per_task["Vision"][0] > per_task["Lang"][0] > per_task["Recom"][0]
+    assert per_task["Recom"][1] > per_task["Lang"][1] > per_task["Vision"][1]
+
+
+def test_dwconv_more_memory_bound_than_conv():
+    """Paper §IV-D1: depth-wise CONV is more memory-intensive (bytes/FLOP)
+    than regular CONV."""
+    conv = conv2d("c", 8, 96, 96, 14, 14, 1, 1)
+    dw = dwconv2d("d", 8, 96, 14, 14, 3, 3)
+    rc = MODEL.profile(conv, HB)
+    rd = MODEL.profile(dw, HB)
+    assert rd.bytes_moved / dw.flops > 2 * rc.bytes_moved / conv.flops
+
+
+def test_job_analyzer_table_shape_and_cache():
+    accel = get_setting("S2")
+    group = build_task_groups("Mix", group_size=30, seed=0)[0]
+    an = JobAnalyzer(accel)
+    table = an.analyze(group.jobs)
+    assert table.lat.shape == (30, 4) and table.bw.shape == (30, 4)
+    assert np.all(table.lat > 0) and np.all(table.bw > 0)
+    assert table.total_flops > 0
+    # second run hits the cache and agrees
+    table2 = an.analyze(group.jobs)
+    np.testing.assert_array_equal(table.lat, table2.lat)
+
+
+def test_settings_table_iii():
+    for name, n_sub in [("S1", 4), ("S2", 4), ("S3", 8), ("S4", 8),
+                        ("S5", 8), ("S6", 16)]:
+        acc = get_setting(name)
+        assert acc.num_sub_accels == n_sub
+    assert all(s.dataflow == "HB" for s in get_setting("S1").sub_accels)
+    assert any(s.dataflow == "LB" for s in get_setting("S2").sub_accels)
+
+
+def test_tpu_submesh_roofline_terms():
+    sm = TPUSubmesh("tp4", tp=4)
+    lat, bw = sm.profile(flops=1e12, hbm_bytes=1e9, host_bytes=1e8)
+    # compute-bound: latency = flops/(tp*peak*util)
+    assert lat == pytest.approx(1e12 / (4 * 197e12 * 0.7), rel=1e-6)
+    assert bw == pytest.approx(1e8 / lat, rel=1e-6)
+    # memory-bound case
+    lat2, _ = sm.profile(flops=1.0, hbm_bytes=1e12, host_bytes=1.0)
+    assert lat2 == pytest.approx(1e12 / (4 * 819e9), rel=1e-6)

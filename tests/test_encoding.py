@@ -1,0 +1,45 @@
+"""Encoding/decoding invariants (Section IV-A) — property-based."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.encoding import decode, decode_to_lists, random_population
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_decode_partition_property(group, accels, seed):
+    """Every job appears in exactly one queue, at exactly one slot."""
+    key = jax.random.PRNGKey(seed)
+    pop = random_population(key, 1, group, accels)
+    accel, prio = pop.accel[0], pop.prio[0]
+    sched = decode(accel, prio, accels)
+    lists = decode_to_lists(accel, prio, accels)
+    all_jobs = sorted(j for q in lists for j in q)
+    assert all_jobs == list(range(group))
+    assert int(sched.count.sum()) == group
+    for a, q in enumerate(lists):
+        assert len(q) == int(sched.count[a])
+        # queue slots of members match the host-side lists
+        assert list(np.asarray(sched.queue[a][:len(q)])) == q
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_decode_priority_order(group, accels, seed):
+    """Within a queue, priorities are non-decreasing (0 = highest first)."""
+    key = jax.random.PRNGKey(seed)
+    pop = random_population(key, 1, group, accels)
+    accel, prio = np.asarray(pop.accel[0]), np.asarray(pop.prio[0])
+    for q in decode_to_lists(accel, prio, accels):
+        ps = [prio[j] for j in q]
+        assert all(ps[i] <= ps[i + 1] for i in range(len(ps) - 1))
+
+
+def test_random_population_ranges():
+    pop = random_population(jax.random.PRNGKey(0), 64, 100, 8)
+    assert pop.accel.shape == (64, 100) and pop.prio.shape == (64, 100)
+    assert int(pop.accel.min()) >= 0 and int(pop.accel.max()) < 8
+    assert float(pop.prio.min()) >= 0.0 and float(pop.prio.max()) < 1.0

@@ -1,0 +1,135 @@
+"""MAGMA operators + search behaviour (Section V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import M3E, MagmaConfig, magma_search
+from repro.core.encoding import random_population
+from repro.core.fitness import FitnessFn
+from repro.core.job_analyzer import table_from_arrays
+from repro.core.magma import (
+    _crossover_accel, _crossover_gen, _crossover_rg, _make_child, _mutate,
+    _next_generation)
+from repro.costmodel import get_setting
+from repro.workloads import build_task_groups
+
+GB = 1024 ** 3
+
+
+def _small_fitness(G=24, A=4, seed=0):
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(0.1, 3.0, (G, A))
+    bw = rng.uniform(0.1, 5.0, (G, A))
+    table = table_from_arrays(lat, bw, rng.uniform(1, 10, G))
+    return FitnessFn(table, bw_sys=2.0)
+
+
+def _parents(G=16, A=4, seed=1):
+    pop = random_population(jax.random.PRNGKey(seed), 2, G, A)
+    return ((pop.accel[0], pop.prio[0]), (pop.accel[1], pop.prio[1]))
+
+
+def _valid(accel, prio, A):
+    assert accel.dtype == jnp.int32
+    assert int(accel.min()) >= 0 and int(accel.max()) < A
+    assert float(prio.min()) >= 0.0 and float(prio.max()) <= 1.0
+
+
+def test_operators_produce_valid_genomes():
+    dad, mom = _parents()
+    key = jax.random.PRNGKey(0)
+    for fn in (lambda k: _crossover_gen(k, dad, mom),
+               lambda k: _crossover_rg(k, dad, mom),
+               lambda k: _crossover_accel(k, dad, mom, 4),
+               lambda k: _mutate(k, dad[0], dad[1], 0.3, 4)):
+        accel, prio = fn(key)
+        _valid(accel, prio, 4)
+
+
+def test_crossover_gen_touches_one_genome():
+    """crossover-gen perturbs exactly one genome, leaving the other intact."""
+    dad, mom = _parents()
+    for seed in range(12):
+        accel, prio = _crossover_gen(jax.random.PRNGKey(seed), dad, mom)
+        accel_changed = bool(jnp.any(accel != dad[0]))
+        prio_changed = bool(jnp.any(prio != dad[1]))
+        assert not (accel_changed and prio_changed)
+
+
+def test_crossover_rg_preserves_cross_genome_pairing():
+    """crossover-rg takes the SAME index range from mom in both genomes."""
+    dad, mom = _parents()
+    for seed in range(12):
+        accel, prio = _crossover_rg(jax.random.PRNGKey(seed), dad, mom)
+        from_mom_a = np.asarray(accel == mom[0][0:]) & np.asarray(mom[0] != dad[0])
+        from_mom_p = np.asarray(prio == mom[1]) & np.asarray(mom[1] != dad[1])
+        # wherever the genomes differ between parents, the mom-copied
+        # positions agree between sections
+        differs = np.asarray((mom[0] != dad[0]) & (mom[1] != dad[1]))
+        assert np.all(from_mom_a[differs] == from_mom_p[differs])
+
+
+def test_crossover_accel_copies_moms_core_schedule():
+    dad, mom = _parents()
+    for seed in range(12):
+        accel, prio = _crossover_accel(jax.random.PRNGKey(seed), dad, mom, 4)
+        # find which core was copied: jobs mom assigned there are identical
+        for a in range(4):
+            sel = np.asarray(mom[0] == a)
+            if np.all(np.asarray(accel)[sel] == a) and \
+               np.allclose(np.asarray(prio)[sel], np.asarray(mom[1])[sel]):
+                break
+        else:
+            pytest.fail("no core fully copied from mom")
+
+
+def test_next_generation_keeps_elites():
+    fit_fn = _small_fitness()
+    pop = random_population(jax.random.PRNGKey(0), 20, fit_fn.group_size,
+                            fit_fn.num_accels)
+    fits = fit_fn(pop.accel, pop.prio)
+    new = _next_generation(jax.random.PRNGKey(1), pop, fits,
+                           MagmaConfig(population=20), fit_fn.num_accels, 2)
+    best = int(jnp.argmax(fits))
+    assert bool(jnp.all(new.accel[0] == pop.accel[best]))
+    new_fits = fit_fn(new.accel, new.prio)
+    assert float(new_fits.max()) >= float(fits.max()) - 1e-6
+
+
+def test_magma_beats_random_sampling():
+    fit_fn = _small_fitness(G=40, A=4)
+    res = magma_search(fit_fn, budget=1500,
+                       cfg=MagmaConfig(population=50), seed=0)
+    from repro.core.optimizers import blackbox
+    rnd = blackbox.random_search(fit_fn, budget=1500, seed=0)
+    assert res.best_fitness > rnd.best_fitness
+    _valid(jnp.asarray(res.best_accel), jnp.asarray(res.best_prio), 4)
+
+
+def test_operator_ablation_ordering():
+    """Fig 16: full MAGMA >= mutation-only (same budget, averaged seeds)."""
+    fit_fn = _small_fitness(G=40, A=4, seed=3)
+    full, mut = [], []
+    for seed in range(3):
+        full.append(magma_search(
+            fit_fn, budget=1200, cfg=MagmaConfig(population=40),
+            seed=seed).best_fitness)
+        mut.append(magma_search(
+            fit_fn, budget=1200,
+            cfg=MagmaConfig(population=40, enable_crossover_gen=False,
+                            enable_crossover_rg=False,
+                            enable_crossover_accel=False),
+            seed=seed).best_fitness)
+    assert np.mean(full) >= np.mean(mut) * 0.98
+
+
+def test_m3e_end_to_end_all_methods_smoke():
+    group = build_task_groups("Mix", group_size=24, seed=0)[0]
+    m3e = M3E(accel=get_setting("S2"), bw_sys=16 * GB)
+    for method in ("magma", "stdga", "de", "pso", "cmaes", "tbpsa",
+                   "random", "herald_like", "ai_mt_like"):
+        res = m3e.search(group, method=method, budget=200, seed=0)
+        assert np.isfinite(res.best_fitness) and res.best_fitness > 0, method
+        queues = m3e.describe_mapping(res)
+        assert sorted(j for q in queues for j in q) == list(range(24)), method

@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules + roofline HLO analyzers (pure logic)."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.roofline import (RooflineTerms, analyze_hlo,
+                                   parse_collectives, shape_bytes)
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[4,8]") == 64
+    assert shape_bytes("f32[2,2]{1,0}") == 16
+    assert shape_bytes("(bf16[4], f32[4])") == 24
+    assert shape_bytes("u8[10]") == 10
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_collectives_trip_counts():
+    hlo = """
+HloModule jit_step
+
+%body.1 (p: (s32[], bf16[8,16])) -> (s32[], bf16[8,16]) {
+  %ag.1 = bf16[8,16]{1,0} all-gather(bf16[8,4]{1,0} %x), dimensions={1}
+  ROOT %t = (s32[], bf16[8,16]) tuple(%i, %ag.1)
+}
+
+%cond.1 (p: (s32[], bf16[8,16])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: bf16[8,16]) -> bf16[8,16] {
+  %w = (s32[], bf16[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  %ar.2 = f32[4]{0} all-reduce(f32[4]{0} %g), to_apply=%sum
+  ROOT %out = bf16[8,16] get-tuple-element(%w), index=1
+}
+"""
+    by_op, total, counts = parse_collectives(hlo)
+    assert by_op["all-gather"] == 8 * 16 * 2 * 10      # x10 trip count
+    assert by_op["all-reduce"] == 16
+    assert counts["all-gather"] == 10
+    assert total == by_op["all-gather"] + by_op["all-reduce"]
+
+
+def test_roofline_terms_dominance():
+    t = RooflineTerms(chips=256, hlo_flops=1e15, hbm_bytes_per_chip=4e9,
+                      collective_bytes_per_chip=4e9, model_flops=6e14,
+                      model_bytes=1e12).finalize()
+    assert t.compute_s == pytest.approx(1e15 / (256 * 197e12))
+    assert t.memory_s == pytest.approx(4e9 / 819e9)
+    assert t.collective_s == pytest.approx(4e9 / 50e9)
+    assert t.dominant == "collective"
+    assert 0 < t.roofline_fraction <= 1.0
+    assert t.useful_ratio == pytest.approx(0.6)
+
+
+def test_logical_spec_dedup_and_divisibility():
+    from types import SimpleNamespace
+    from repro.dist.sharding import logical_to_spec
+    # mock mesh: shape lookups only (real >1-device meshes need devices)
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           shape={"data": 16, "model": 16})
+    # duplicate target axis: first dim wins (trailing Nones are trimmed)
+    spec = logical_to_spec(("batch", "seq", "embed"), mesh, rules={})
+    assert spec == P(("data",))
+    # non-divisible dim dropped when shape given (49155 % 16 != 0)
+    spec = logical_to_spec(("vocab", "embed"), mesh, rules={},
+                           shape=(49155, 2048))
+    assert spec == P(None, "data")
+    # divisible vocab keeps the mapping
+    spec = logical_to_spec(("vocab", "embed"), mesh, rules={},
+                           shape=(49280, 2048))
+    assert spec == P("model", "data")
+
+
+def test_batch_axes():
+    import jax
+    from repro.dist.sharding import batch_axes
+    m1 = jax.make_mesh((1, 1), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert batch_axes(m1) == ("data",)
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+    from repro.dist.sharding import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x
+
+
+def test_analyze_hlo_fusion_and_trips():
+    hlo = """
+HloModule jit_step
+
+%fused_computation.1 (p0: f32[64]) -> f32[64] {
+  %big = f32[9999999]{0} broadcast(f32[] %c)
+  ROOT %r = f32[64]{0} add(%p0, %p0)
+}
+
+%body.1 (p: (s32[], bf16[8,16])) -> (s32[], bf16[8,16]) {
+  %ag.1 = bf16[8,16]{1,0} all-gather(bf16[8,4]{1,0} %x), dimensions={1}
+  %f.1 = f32[64]{0} fusion(f32[64]{0} %y), kind=kLoop, calls=%fused_computation.1
+  ROOT %t = (s32[], bf16[8,16]) tuple(%i, %ag.1)
+}
+
+%cond.1 (p: (s32[], bf16[8,16])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: bf16[8,16]) -> bf16[8,16] {
+  %a = bf16[8,16]{1,0} parameter(0)
+  %w = (s32[], bf16[8,16]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = bf16[8,16] get-tuple-element(%w), index=1
+}
+"""
+    r = analyze_hlo(hlo)
+    assert r["collectives_by_op"]["all-gather"] == 8 * 16 * 2 * 10
+    # fusion INTERNALS (the 9999999 broadcast) never count toward HBM
+    assert r["hbm_bytes_est"] < 1e6
+    # but the fusion's 64-float output does, x10 trips, x2 (write+read)
+    assert r["hbm_bytes_est"] >= 64 * 4 * 10 * 2
+    # entry params counted once as reads
+    assert r["param_bytes"] == 8 * 16 * 2
+
+
+def test_analyze_hlo_fused_dus_in_place():
+    """A fusion whose body does dynamic-update-slice aliases its buffer:
+    only the update slice counts as traffic."""
+    hlo = """
+HloModule jit_step
+
+%fused_dus.1 (p0: bf16[48,8,2048], p1: bf16[1,8,2048]) -> bf16[48,8,2048] {
+  ROOT %d = bf16[48,8,2048]{2,1,0} dynamic-update-slice(bf16[48,8,2048] %p0, bf16[1,8,2048] %p1, %i0, %i1, %i2)
+}
+
+%body.1 (p: (s32[], bf16[48,8,2048])) -> (s32[], bf16[48,8,2048]) {
+  %f.1 = bf16[48,8,2048]{2,1,0} fusion(%buf, %upd), kind=kLoop, calls=%fused_dus.1
+  ROOT %t = (s32[], bf16[48,8,2048]) tuple(%i, %f.1)
+}
+
+%cond.1 (p: (s32[], bf16[48,8,2048])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: bf16[48,8,2048]) -> bf16[48,8,2048] {
+  %w = (s32[], bf16[48,8,2048]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"48"}}
+  ROOT %out = bf16[48,8,2048] get-tuple-element(%w), index=1
+}
+"""
+    r = analyze_hlo(hlo)
+    # 48 trips x update slice (1,8,2048) bf16 x 2 (w+r), NOT 48 trips x
+    # full buffer (+ small change for the loop-condition compare)
+    slice_b = 8 * 2048 * 2
+    assert 2 * 48 * slice_b <= r["hbm_bytes_est"] <= 2 * 48 * slice_b + 1e4
+    uncredited = 2 * 48 * 48 * 8 * 2048 * 2    # what full-buffer counting gives
+    assert r["hbm_bytes_est"] < uncredited / 10
