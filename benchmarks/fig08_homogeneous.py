@@ -1,17 +1,20 @@
 """Fig. 8: small homogeneous accelerator (S1, BW=16 GB/s), four tasks,
 all mappers.  Validation: MAGMA >= every baseline (paper: geomean 1.4x
-over Herald-like / 1.41x over AI-MT-like, 1.6x over other optimizers)."""
+over Herald-like / 1.41x over AI-MT-like, 1.6x over other optimizers).
+
+MAGMA runs all four tasks x all seeds as ONE device-resident
+``magma_search_batch`` call (the tables share (G, A))."""
 from __future__ import annotations
 
-from benchmarks.common import (print_normalized, resolve, run_problem,
-                               std_parser, summarize_vs)
+from benchmarks.common import (print_normalized, resolve,
+                               run_problems_batched, std_parser,
+                               summarize_vs)
 
 
 def run(budget, methods, group_size=100, seeds=1):
-    rows = {}
-    for task in ("Vision", "Lang", "Recom", "Mix"):
-        rows[task] = run_problem(task, "S1", 16.0, methods, budget,
-                                 group_size, seeds)
+    specs = [(task, task, "S1", 16.0)
+             for task in ("Vision", "Lang", "Recom", "Mix")]
+    rows = run_problems_batched(specs, methods, budget, group_size, seeds)
     print_normalized("Fig 8: S1 homogeneous, BW=16 GB/s", rows)
     vs = summarize_vs(rows)
     print("geomean MAGMA advantage:",

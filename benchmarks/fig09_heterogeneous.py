@@ -1,18 +1,21 @@
 """Fig. 9: heterogeneous accelerators — S2 (small, BW=16) and S4 (large,
 BW=256) on Vision and Mix.  Validation: MAGMA best everywhere; AI-MT-like
-(homogeneous-targeted) collapses on heterogeneous settings."""
+(homogeneous-targeted) collapses on heterogeneous settings.
+
+MAGMA batches per setting (scenarios sharing (G, A) stack): the two tasks
+x all seeds of each setting run as one ``magma_search_batch`` call."""
 from __future__ import annotations
 
-from benchmarks.common import (print_normalized, resolve, run_problem,
-                               std_parser, summarize_vs)
+from benchmarks.common import (print_normalized, resolve,
+                               run_problems_batched, std_parser,
+                               summarize_vs)
 
 
 def run(budget, methods, group_size=100, seeds=1):
-    rows = {}
-    for setting, bw in (("S2", 16.0), ("S4", 256.0)):
-        for task in ("Vision", "Mix"):
-            rows[f"{task}-{setting}-bw{int(bw)}"] = run_problem(
-                task, setting, bw, methods, budget, group_size, seeds)
+    specs = [(f"{task}-{setting}-bw{int(bw)}", task, setting, bw)
+             for setting, bw in (("S2", 16.0), ("S4", 256.0))
+             for task in ("Vision", "Mix")]
+    rows = run_problems_batched(specs, methods, budget, group_size, seeds)
     print_normalized("Fig 9: heterogeneous S2/S4", rows)
     vs = summarize_vs(rows)
     print("geomean MAGMA advantage:",

@@ -4,8 +4,6 @@ Validation: hetero (S4) > homog (S3) at BW=1; homog wins at BW=256;
 BigLittle (S5) best at BW=1 despite the least compute."""
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks.common import GB, std_parser
 from repro.core import M3E
 from repro.costmodel import MaestroModel, get_setting
@@ -14,17 +12,21 @@ from repro.core.job_analyzer import JobAnalyzer
 
 
 def run(budget, group_size=100, seeds=1):
+    from repro.core.magma import magma_search_batch
+
     print("== Fig 13: S3/S4/S5 x BW (Mix, MAGMA), normalized to S5 ==")
-    results = {}
-    for bw in (1.0, 256.0):
-        row = {}
-        for setting in ("S3", "S4", "S5"):
-            m3e = M3E(accel=get_setting(setting), bw_sys=bw * GB)
-            group = build_task_groups("Mix", group_size=group_size, seed=0)[0]
-            vals = [m3e.search(group, method="magma", budget=budget,
-                               seed=s).best_fitness for s in range(seeds)]
-            row[setting] = float(np.mean(vals))
-        results[bw] = row
+    results = {1.0: {}, 256.0: {}}
+    group = build_task_groups("Mix", group_size=group_size, seed=0)[0]
+    # per setting, both BW scenarios x all seeds run as one batched call
+    # (same job tables, different bw_sys)
+    for setting in ("S3", "S4", "S5"):
+        fits = [M3E(accel=get_setting(setting), bw_sys=bw * GB).prepare(group)
+                for bw in (1.0, 256.0)]
+        batch = magma_search_batch(fits, budget=budget,
+                                   seeds=list(range(seeds)))
+        for i, bw in enumerate((1.0, 256.0)):
+            results[bw][setting] = float(batch.best_fitness[i].mean())
+    for bw, row in results.items():
         norm = row["S5"]
         print(f"BW={bw:g}: " + ", ".join(
             f"{k}={v / norm:.3f}" for k, v in row.items()))

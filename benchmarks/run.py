@@ -18,7 +18,8 @@ from benchmarks import (fig07_job_analysis, fig08_homogeneous,
                         fig09_heterogeneous, fig12_bw_sweep,
                         fig13_combinations, fig14_flexible,
                         fig15_solution_analysis, fig16_operator_ablation,
-                        fig17_group_size, perf_makespan, tableV_warmstart)
+                        fig17_group_size, perf_makespan, perf_scan_engine,
+                        tableV_warmstart)
 from benchmarks.common import FAST_METHODS, summarize_vs
 
 
@@ -76,6 +77,9 @@ def main() -> None:
     bench("perf_makespan", lambda: perf_makespan.run(gs),
           lambda r: "epoch=%.2fms search=%.1fs" % (r["epoch_ms"],
                                                    r["search_s"]))
+    bench("perf_scan_engine", lambda: perf_scan_engine.run(budget, 16),
+          lambda r: "scan=%.1fx sweep=%.1fx" % (r["scan_speedup"],
+                                                r["sweep_speedup"]))
 
     print("\n==== benchmark summary (name,seconds,headline) ====")
     for name, dt, head in rows:

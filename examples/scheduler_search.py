@@ -49,6 +49,22 @@ def main():
           f"{warm.best_fitness / 1e9:.2f} GFLOPs/s "
           f"(vs full-search level {fits['magma'] / 1e9:.2f})")
 
+    # device-resident scenario sweep: a BW grid x 2 seeds as ONE compiled
+    # XLA call (Fig. 12-style sweep via magma_search_batch)
+    from repro.core.magma import magma_search_batch
+    import time
+    bws = (0.5, 1.0, 4.0, 16.0)
+    sweep_fits = [M3E(accel=get_setting(args.setting), bw_sys=b * GB
+                      ).prepare(groups[0]) for b in bws]
+    t0 = time.perf_counter()
+    batch = magma_search_batch(sweep_fits, budget=args.budget, seeds=(0, 1))
+    dt = time.perf_counter() - t0
+    print(f"\nbatched BW sweep ({len(bws)} scenarios x 2 seeds, "
+          f"one compiled call, {dt:.1f}s):")
+    for i, b in enumerate(bws):
+        mean = batch.best_fitness[i].mean() / 1e9
+        print(f"  BW={b:5.1f} GB/s   {mean:9.2f} GFLOPs/s")
+
 
 if __name__ == "__main__":
     main()

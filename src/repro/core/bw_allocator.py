@@ -45,40 +45,53 @@ def _queue_tables(sched: DecodedSchedule, lat: jnp.ndarray, bw: jnp.ndarray):
     return qlat, jnp.maximum(qbw, _BW_FLOOR)
 
 
+def simulate_tables(qlat: jnp.ndarray, qbw: jnp.ndarray, count: jnp.ndarray,
+                    bw_sys) -> jnp.ndarray:
+    """(P,) makespans from dense queue tables: qlat/qbw (P, A, G), count
+    (P, A).  The whole population advances through one event scan — every
+    per-event quantity is a dense (P, A) array (no per-individual scatter
+    or gather chains, which XLA:CPU serializes)."""
+    P, A, G = qlat.shape
+    qbytes = qlat * qbw                  # remaining work, paper's CurJobs
+    iota_a = jax.lax.broadcasted_iota(jnp.int32, (P, A), 1)
+
+    def pick(q, ptr):
+        return jnp.take_along_axis(q, ptr[:, :, None], axis=2)[..., 0]
+
+    ptr0 = jnp.zeros((P, A), jnp.int32)
+    rem0 = jnp.where(ptr0 < count, pick(qbytes, ptr0), 0.0)
+    t0 = jnp.zeros((P,), jnp.float32)
+
+    def step(state, _):
+        t, rem, ptr = state
+        active = ptr < count
+        req = jnp.where(active, pick(qbw, ptr), 0.0)
+        total = jnp.sum(req, axis=1)
+        scale = jnp.minimum(1.0, bw_sys / jnp.maximum(total, _TINY))
+        alloc = req * scale[:, None]
+        runtime = jnp.where(active, rem / jnp.maximum(alloc, _TINY), jnp.inf)
+        any_active = jnp.any(active, axis=1)
+        dt = jnp.where(any_active, jnp.min(runtime, axis=1), 0.0)
+        rem = jnp.maximum(rem - dt[:, None] * alloc, 0.0)
+        fin = jnp.argmin(runtime, axis=1)
+        fin_oh = (iota_a == fin[:, None]) & any_active[:, None]
+        ptr = ptr + fin_oh.astype(jnp.int32)
+        nxt_active = ptr < count
+        nxt = pick(qbytes, ptr)
+        rem = jnp.where(fin_oh, jnp.where(nxt_active, nxt, 0.0), rem)
+        return (t + dt, rem, ptr), None
+
+    (t, _, _), _ = jax.lax.scan(step, (t0, rem0, ptr0), None, length=G)
+    return t
+
+
 def simulate_decoded(sched: DecodedSchedule, lat: jnp.ndarray, bw: jnp.ndarray,
                      bw_sys: float) -> jnp.ndarray:
     """Makespan (seconds, f32) of one decoded schedule."""
-    qlat, qbw = _queue_tables(sched, lat.astype(jnp.float32), bw.astype(jnp.float32))
-    A, G = qlat.shape
-    count = sched.count
-
-    active0 = count > 0
-    rem0 = jnp.where(active0, qlat[:, 0] * qbw[:, 0], 0.0)
-    ptr0 = jnp.where(active0, 1, 0).astype(jnp.int32)
-
-    def step(state, _):
-        t, rem, ptr, active = state
-        idx = jnp.maximum(ptr - 1, 0)
-        req = jnp.where(active, jnp.take_along_axis(qbw, idx[:, None], 1)[:, 0], 0.0)
-        total = jnp.sum(req)
-        scale = jnp.minimum(1.0, bw_sys / jnp.maximum(total, _TINY))
-        alloc = req * scale
-        runtime = jnp.where(active, rem / jnp.maximum(alloc, _TINY), jnp.inf)
-        any_active = jnp.any(active)
-        dt = jnp.where(any_active, jnp.min(runtime), 0.0)
-        rem = jnp.maximum(rem - dt * alloc, 0.0)
-        fin = jnp.argmin(runtime)
-
-        has_next = ptr[fin] < count[fin]
-        nxt_rem = qlat[fin, ptr[fin]] * qbw[fin, ptr[fin]]
-        rem = rem.at[fin].set(jnp.where(any_active & has_next, nxt_rem, 0.0))
-        active = active.at[fin].set(any_active & has_next)
-        ptr = ptr.at[fin].add(jnp.where(any_active & has_next, 1, 0))
-        return (t + dt, rem, ptr, active), None
-
-    (t, _, _, _), _ = jax.lax.scan(step, (jnp.float32(0.0), rem0, ptr0, active0),
-                                   None, length=G)
-    return t
+    qlat, qbw = _queue_tables(sched, lat.astype(jnp.float32),
+                              bw.astype(jnp.float32))
+    return simulate_tables(qlat[None], qbw[None], sched.count[None],
+                           bw_sys)[0]
 
 
 @partial(jax.jit, static_argnames=("num_accels",))
@@ -93,8 +106,16 @@ def simulate(accel: jnp.ndarray, prio: jnp.ndarray, lat: jnp.ndarray,
 def simulate_population(accel: jnp.ndarray, prio: jnp.ndarray, lat: jnp.ndarray,
                         bw: jnp.ndarray, bw_sys: float, num_accels: int) -> jnp.ndarray:
     """(P,) makespans for a whole population — the M3E fitness hot-loop."""
-    return jax.vmap(lambda a, p: simulate(a, p, lat, bw, bw_sys, num_accels))(
-        accel, prio)
+    latf = lat.astype(jnp.float32)
+    bwf = bw.astype(jnp.float32)
+
+    def tables_one(a, p):
+        sched = decode(a, p, num_accels)
+        qlat, qbw = _queue_tables(sched, latf, bwf)
+        return qlat, qbw, sched.count
+
+    qlat, qbw, count = jax.vmap(tables_one)(accel, prio)
+    return simulate_tables(qlat, qbw, count, bw_sys)
 
 
 # ---------------------------------------------------------------------------

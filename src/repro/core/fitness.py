@@ -4,11 +4,24 @@ The evaluator is built once per (Job Analysis Table, system BW, objective)
 and then called inside the optimization loop; a single jitted vmapped scan
 evaluates the entire population (~1 ms per 100-individual epoch on CPU,
 vs. the paper's 0.25 s/epoch on a desktop CPU).
+
+Two call forms exist:
+
+  - ``FitnessFn(...)`` — the object-style evaluator used by every mapper
+    (Table IV).  Its ``__call__`` is pure JAX, so it can be traced inside
+    ``jax.lax.scan`` / ``jax.vmap`` (the device-resident MAGMA engine calls
+    it from inside its generation scan).
+  - ``evaluate_params(params, accel, prio, ...)`` — a functional form whose
+    scenario data (``FitnessParams``: lat/bw tables, system BW, FLOPs,
+    objective code) is *traced* rather than closed over.  Stacking several
+    ``FitnessParams`` along a leading axis and ``jax.vmap``-ing this
+    function is how ``magma_search_batch`` runs whole scenario grids
+    (Fig. 8/9/13/17) as one XLA program.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -17,16 +30,97 @@ import numpy as np
 from repro.core.bw_allocator import simulate_population, throughput
 from repro.core.job_analyzer import JobAnalysisTable
 
+# objective registry: name -> (code, needs_energy)
+OBJECTIVE_CODES = {"throughput": 0, "latency": 1, "energy": 2, "edp": 3}
+
+
+class FitnessParams(NamedTuple):
+    """Traced scenario data — everything the fitness needs besides genomes.
+
+    All leaves are arrays, so a batch of scenarios with the same (G, A)
+    shape stacks along a leading axis and vmaps.
+    """
+    lat: jnp.ndarray             # (G, A) f32 no-stall latencies
+    bw: jnp.ndarray              # (G, A) f32 required bandwidths
+    bw_sys: jnp.ndarray          # ()     f32 system bandwidth
+    flops: jnp.ndarray           # ()     f32 total group FLOPs
+    energy: jnp.ndarray          # (G, A) f32 (zeros when table has none)
+    objective_code: jnp.ndarray  # ()     i32 index into OBJECTIVE_CODES
+
+
+def population_energies(energy: jnp.ndarray, accel: jnp.ndarray) -> jnp.ndarray:
+    """(P,) total group energy (J) of each assignment — order-free
+    (Section IV-C alternative objectives)."""
+    return jax.vmap(
+        lambda a: jnp.take_along_axis(energy, a[:, None], axis=1).sum())(accel)
+
+
+def evaluate_params(params: FitnessParams, accel: jnp.ndarray,
+                    prio: jnp.ndarray, *, num_accels: int,
+                    use_kernel: bool = False,
+                    objective: Optional[str] = None) -> jnp.ndarray:
+    """(P,) fitness values — higher is better for every objective.
+
+    ``objective`` may be a static name ('throughput' | 'latency' | 'energy'
+    | 'edp'), in which case only that branch is computed, or ``None``, in
+    which case the branch is selected element-wise by
+    ``params.objective_code`` — the form ``magma_search_batch`` uses so
+    scenarios with different objectives can share one compiled program.
+    """
+    if objective is not None and objective not in OBJECTIVE_CODES:
+        raise ValueError(f"unknown objective {objective!r}")
+    if objective == "energy":
+        return -population_energies(params.energy, accel)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        ms = kops.population_makespan(accel, prio, params.lat, params.bw,
+                                      params.bw_sys, num_accels)
+    else:
+        ms = simulate_population(accel, prio, params.lat, params.bw,
+                                 params.bw_sys, num_accels)
+
+    if objective == "throughput":
+        return throughput(params.flops, ms)
+    if objective == "latency":
+        return -ms
+    if objective == "edp":
+        return -population_energies(params.energy, accel) * ms
+
+    # dynamic objective: branch-free select on the traced code
+    en = population_energies(params.energy, accel)
+    code = params.objective_code
+    return jnp.select(
+        [code == 0, code == 1, code == 2],
+        [throughput(params.flops, ms), -ms, -en],
+        -en * ms)
+
+
+def stack_fitness_params(fns: Sequence["FitnessFn"]) -> FitnessParams:
+    """Stack the params of several same-shape FitnessFns along axis 0."""
+    assert len(fns) > 0, "need at least one scenario"
+    G, A = fns[0].params.lat.shape
+    for f in fns[1:]:
+        if f.params.lat.shape != (G, A):
+            raise ValueError(
+                f"scenario tables must share (G, A)={G, A}; "
+                f"got {f.params.lat.shape}")
+        if f.num_accels != fns[0].num_accels:
+            raise ValueError("scenarios must share num_accels")
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[f.params for f in fns])
+
 
 @dataclasses.dataclass
 class FitnessFn:
     table: JobAnalysisTable
     bw_sys: float
-    objective: str = "throughput"    # 'throughput' | 'latency'
+    objective: str = "throughput"    # 'throughput' | 'latency' | 'energy' | 'edp'
     use_kernel: bool = False         # route through the Pallas makespan kernel
 
     def __post_init__(self):
         self.bw_sys = float(self.bw_sys)
+        if self.objective not in OBJECTIVE_CODES:
+            raise ValueError(f"unknown objective {self.objective!r}")
         self._lat = jnp.asarray(self.table.lat, dtype=jnp.float32)
         self._bw = jnp.asarray(self.table.bw, dtype=jnp.float32)
         self._flops = float(self.table.total_flops)
@@ -34,16 +128,25 @@ class FitnessFn:
         self._energy = (jnp.asarray(self.table.energy, jnp.float32)
                         if getattr(self.table, "energy", None) is not None
                         else None)
-        if self.use_kernel:
-            from repro.kernels import ops as kops
-            self._kernel = kops.population_makespan
-        else:
-            self._kernel = None
+        if self.objective in ("energy", "edp") and self._energy is None:
+            raise ValueError(
+                f"objective {self.objective!r} needs an energy column, "
+                "but the job analysis table has none")
+        self.params = FitnessParams(
+            lat=self._lat,
+            bw=self._bw,
+            bw_sys=jnp.float32(self.bw_sys),
+            flops=jnp.float32(self._flops),
+            energy=(self._energy if self._energy is not None
+                    else jnp.zeros_like(self._lat)),
+            objective_code=jnp.int32(OBJECTIVE_CODES[self.objective]),
+        )
 
     def makespans(self, accel: jnp.ndarray, prio: jnp.ndarray) -> jnp.ndarray:
-        if self._kernel is not None:
-            return self._kernel(accel, prio, self._lat, self._bw,
-                                self.bw_sys, self._A)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+            return kops.population_makespan(accel, prio, self._lat, self._bw,
+                                            self.bw_sys, self._A)
         return simulate_population(accel, prio, self._lat, self._bw,
                                    self.bw_sys, self._A)
 
@@ -51,25 +154,15 @@ class FitnessFn:
         """(P,) total group energy (J) of each assignment — order-free
         (Section IV-C alternative objectives)."""
         assert self._energy is not None, "table has no energy column"
-        return jax.vmap(
-            lambda a: jnp.take_along_axis(self._energy, a[:, None],
-                                          axis=1).sum())(accel)
+        return population_energies(self._energy, accel)
 
     def __call__(self, accel: jnp.ndarray, prio: jnp.ndarray) -> jnp.ndarray:
         """(P,) fitness values — higher is better for every objective.
 
-        'throughput' (paper default), 'latency' (= -makespan), 'energy'
-        (= -joules; assignment-only), 'edp' (= -energy*delay)."""
-        if self.objective == "energy":
-            return -self.energies(accel)
-        ms = self.makespans(accel, prio)
-        if self.objective == "throughput":
-            return throughput(self._flops, ms)
-        if self.objective == "latency":
-            return -ms
-        if self.objective == "edp":
-            return -self.energies(accel) * ms
-        raise ValueError(f"unknown objective {self.objective!r}")
+        Pure JAX: traceable from inside jit / scan / vmap."""
+        return evaluate_params(self.params, accel, prio,
+                               num_accels=self._A, use_kernel=self.use_kernel,
+                               objective=self.objective)
 
     @property
     def num_accels(self) -> int:

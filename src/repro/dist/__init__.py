@@ -1,0 +1,4 @@
+"""Distribution utilities: logical-axis sharding rules and gradient
+compression.  ``repro.dist.sharding`` maps MaxText-style logical axis names
+to mesh ``PartitionSpec``s; ``repro.dist.compression`` implements int8
+gradient all-reduce with error feedback."""

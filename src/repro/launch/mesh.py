@@ -12,21 +12,18 @@ FSDP + batch; pod is pure data parallelism across the DCN boundary.
 """
 from __future__ import annotations
 
-import jax
+from repro.dist.sharding import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_plan(plan):
     """Mesh from a fault-tolerance MeshPlan (elastic restart path)."""
-    return jax.make_mesh(
-        plan.shape, plan.axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.shape))
+    return make_mesh(plan.shape, plan.axis_names)
 
 
 def model_axis_size(mesh) -> int:

@@ -23,7 +23,7 @@ import argparse
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.dist.sharding import use_mesh
+from repro.dist.sharding import make_mesh, use_mesh
 from repro.models.registry import get_model, sharding_rules
 from repro.train.data import TokenStream
 from repro.train.loop import TrainConfig, train
@@ -54,9 +54,8 @@ def main() -> None:
 
     n_dev = len(jax.devices())
     if n_dev > 1:
-        mesh = jax.make_mesh(
-            (n_dev // min(n_dev, 4), min(n_dev, 4)), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh(
+            (n_dev // min(n_dev, 4), min(n_dev, 4)), ("data", "model"))
         rules = sharding_rules(cfg, mesh.shape["model"])
         with mesh, use_mesh(mesh, rules):
             train(model, tc, stream, args.steps, seed=args.seed,

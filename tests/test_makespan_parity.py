@@ -1,0 +1,102 @@
+"""Pallas makespan kernel parity: interpret-mode kernel vs the jnp scan
+simulator vs the float64 numpy oracle, on deliberately non-aligned shapes
+(A not a multiple of 8, G not a multiple of 128, P not a multiple of the
+population block) and scheduling edge cases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bw_allocator import simulate_numpy, simulate_population
+from repro.core.encoding import decode, decode_to_lists, random_population
+from repro.kernels.makespan import makespan_pallas
+from repro.kernels.ops import population_makespan
+
+
+def _tables(rng, G, A):
+    lat = rng.uniform(0.05, 5.0, (G, A))
+    bw = rng.uniform(0.01, 10.0, (G, A))
+    return lat, bw
+
+
+def _check_parity(pop, lat, bw, bw_sys, A, rel=2e-3):
+    latf = jnp.asarray(lat, jnp.float32)
+    bwf = jnp.asarray(bw, jnp.float32)
+    ms_ref = np.asarray(simulate_population(
+        pop.accel, pop.prio, latf, bwf, bw_sys, A))
+    ms_ker = np.asarray(population_makespan(
+        pop.accel, pop.prio, latf, bwf, bw_sys, A, interpret=True))
+    np.testing.assert_allclose(ms_ker, ms_ref, rtol=1e-4, atol=1e-5)
+    for p in range(pop.size):
+        queues = decode_to_lists(pop.accel[p], pop.prio[p], A)
+        want = simulate_numpy(queues, lat, bw, bw_sys)
+        assert ms_ker[p] == pytest.approx(want, rel=rel), (p, ms_ker[p], want)
+
+
+@pytest.mark.parametrize("G,A,P,bw_sys", [
+    (37, 5, 7, 3.0),      # A % 8 != 0, G % 128 != 0, P % pop_block != 0
+    (130, 3, 8, 10.0),    # G just over one 128 lane tile
+    (12, 9, 5, 1.0),      # A > one 8-sublane tile
+])
+def test_kernel_matches_simulators_nonaligned(G, A, P, bw_sys):
+    rng = np.random.default_rng(G * 1000 + A)
+    lat, bw = _tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(A), P, G, A)
+    _check_parity(pop, lat, bw, bw_sys, A)
+
+
+def test_kernel_single_job_group():
+    """G=1: one event drains the only queue."""
+    rng = np.random.default_rng(0)
+    lat, bw = _tables(rng, 1, 3)
+    pop = random_population(jax.random.PRNGKey(0), 2, 1, 3)
+    _check_parity(pop, lat, bw, 2.0, 3)
+
+
+def test_kernel_empty_queues():
+    """All jobs forced onto accel 0 — every other queue is empty."""
+    G, A = 19, 4
+    rng = np.random.default_rng(1)
+    lat, bw = _tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(1), 3, G, A)
+    pop = pop._replace(accel=jnp.zeros_like(pop.accel))
+    _check_parity(pop, lat, bw, 5.0, A)
+    # serial queue with ample BW: makespan == sum of column-0 latencies
+    ms = np.asarray(population_makespan(
+        pop.accel, pop.prio, jnp.asarray(lat, jnp.float32),
+        jnp.asarray(bw, jnp.float32), 1e9, A, interpret=True))
+    np.testing.assert_allclose(ms, lat[:, 0].sum(), rtol=1e-4)
+
+
+def test_kernel_bandwidth_saturated():
+    """bw_sys far below the aggregate request: everything throttles."""
+    G, A = 23, 6
+    rng = np.random.default_rng(2)
+    lat, bw = _tables(rng, G, A)
+    pop = random_population(jax.random.PRNGKey(2), 4, G, A)
+    _check_parity(pop, lat, bw, 0.05, A)
+
+
+@pytest.mark.parametrize("pop_block", [1, 3, 8])
+def test_makespan_pallas_pop_block_invariance(pop_block):
+    """The P-tiling of the grid must not change results (incl. padding
+    rows, which are all-empty queues)."""
+    G, A, P = 31, 4, 5
+    rng = np.random.default_rng(3)
+    lat, bw = _tables(rng, G, A)
+    latf = jnp.asarray(lat, jnp.float32)
+    bwf = jnp.asarray(bw, jnp.float32)
+    pop = random_population(jax.random.PRNGKey(3), P, G, A)
+
+    def decode_one(a, p):
+        sched = decode(a, p, A)
+        qlat = jnp.take_along_axis(latf.T, sched.queue, axis=1)
+        qbw = jnp.take_along_axis(jnp.maximum(bwf, 1e-3).T, sched.queue, axis=1)
+        return qlat, qbw, sched.count
+
+    qlat, qbw, count = jax.vmap(decode_one)(pop.accel, pop.prio)
+    ms = np.asarray(makespan_pallas(qlat, qbw, count, 2.0,
+                                    pop_block=pop_block, interpret=True))
+    ref = np.asarray(simulate_population(pop.accel, pop.prio, latf, bwf,
+                                         2.0, A))
+    np.testing.assert_allclose(ms, ref, rtol=1e-4, atol=1e-5)

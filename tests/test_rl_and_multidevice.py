@@ -61,23 +61,24 @@ def test_sharded_train_step_multidevice():
         cfg = get_smoke_config('granite-3-2b').replace(
             dtype='float32', d_model=64, d_ff=128)
         model = get_model(cfg)
-        mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.dist.sharding import make_mesh
+        mesh = make_mesh((2, 4), ('data', 'model'))
         rules = sharding_rules(cfg, 4)
         stream = TokenStream(cfg, batch=4, seq=16, seed=0)
         with mesh, use_mesh(mesh, rules):
             state = init_state(model, jax.random.PRNGKey(0))
             _, state_sh = sh.train_state_shardings(model, mesh)
             state = jax.device_put(state, state_sh)
-            step = jax.jit(make_train_step(model, TrainConfig(warmup_steps=1,
-                                                              total_steps=10)),
+            step = jax.jit(make_train_step(model, TrainConfig(lr=3e-3,
+                                                              warmup_steps=2,
+                                                              total_steps=40)),
                            in_shardings=(state_sh, None), donate_argnums=0)
             losses = []
-            for s in range(6):
+            for s in range(25):
                 state, m = step(state, stream.batch_at(s))
                 losses.append(float(m['loss']))
         assert all(np.isfinite(l) for l in losses), losses
-        assert losses[-1] < losses[0]
+        assert np.mean(losses[-3:]) < losses[0] - 0.05, losses
         print('LOSSES', losses[0], losses[-1])
     """)
     assert "LOSSES" in out
@@ -90,8 +91,8 @@ def test_compressed_gradient_allreduce_multidevice():
         from jax.sharding import PartitionSpec as P
         from repro.dist.compression import (make_compressed_grad_fn,
                                             init_error_buffers)
-        mesh = jax.make_mesh((8,), ('data',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.sharding import make_mesh
+        mesh = make_mesh((8,), ('data',))
         w = jnp.zeros((16,))
         X = jax.random.normal(jax.random.PRNGKey(0), (64, 16))
         y = X @ jnp.arange(16, dtype=jnp.float32) * 0.1
@@ -101,7 +102,7 @@ def test_compressed_gradient_allreduce_multidevice():
             return jnp.mean((Xb @ w - yb) ** 2)
 
         grad_fn = make_compressed_grad_fn(loss_fn, mesh, 'data')
-        errors = init_error_buffers(w)
+        errors = init_error_buffers(w, n_shards=8)
         with mesh:
             for i in range(60):
                 loss, g, errors = grad_fn(w, (X, y), errors)
@@ -125,8 +126,8 @@ def test_dryrun_cell_smoke_subprocess():
         from repro.launch.roofline import parse_collectives
         cfg = get_smoke_config('granite-3-2b')
         shape = ShapeConfig('t', seq_len=64, global_batch=4, kind='train')
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.dist.sharding import make_mesh
+        mesh = make_mesh((2, 2, 2), ('pod', 'data', 'model'))
         rules = sharding_rules(cfg, 2)
         with mesh, use_mesh(mesh, rules):
             fn, args = BUILDERS['train'](cfg, shape, mesh)
@@ -152,15 +153,14 @@ def test_elastic_restore_across_meshes():
         cfg = get_smoke_config('granite-3-2b').replace(dtype='float32')
         model = get_model(cfg)
         d = tempfile.mkdtemp()
-        m1 = jax.make_mesh((2, 4), ('data', 'model'),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.dist.sharding import make_mesh
+        m1 = make_mesh((2, 4), ('data', 'model'))
         with m1, use_mesh(m1, {}):
             state = init_state(model, jax.random.PRNGKey(0))
             _, sh1 = sh.train_state_shardings(model, m1)
             state = jax.device_put(state, sh1)
             path = ckpt.save(d, state, step=1)
-        m2 = jax.make_mesh((4, 2), ('data', 'model'),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2)
+        m2 = make_mesh((4, 2), ('data', 'model'))
         with m2, use_mesh(m2, {}):
             _, sh2 = sh.train_state_shardings(model, m2)
             like = jax.eval_shape(lambda: init_state(model,
