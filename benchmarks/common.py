@@ -65,18 +65,22 @@ def run_problem(task: str, setting: str, bw_gb: float, methods: Sequence[str],
 
 def run_problems_batched(specs: Sequence[tuple], methods: Sequence[str],
                          budget: int, group_size: int = 100, seeds: int = 1,
-                         seed0: int = 0) -> Dict[str, Dict[str, float]]:
+                         seed0: int = 0,
+                         sweep=None) -> Dict[str, Dict[str, float]]:
     """Best fitness per method over a GRID of problems.
 
     ``specs`` is a list of ``(label, task, setting, bw_gb)``.  MAGMA runs
-    device-resident: every group of problems sharing an accelerator
-    setting (same ``(G, A)`` tables) plus all seeds execute as ONE
-    ``magma_search_batch`` call — Fig. 8/9-style sweeps compile once and
-    dispatch once instead of once per (problem, seed).  The baseline
-    methods keep their per-problem host loops (they are host-driven
-    optimizers).  Returns ``{label: {method: mean best fitness}}``.
+    through ``repro.core.sweep``: every group of problems sharing an
+    accelerator setting (same ``(G, A)`` tables) plus all seeds execute
+    as one sweep — sharded across however many devices are visible
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fakes a fleet
+    on CPU) and falling back to the classic single vmapped call on one.
+    Pass ``sweep=SweepConfig(chunk_rows=...)`` to stream grids bigger
+    than device memory.  The baseline methods keep their per-problem host
+    loops (they are host-driven optimizers).  Returns
+    ``{label: {method: mean best fitness}}``.
     """
-    from repro.core.magma import magma_search_batch
+    from repro.core.sweep import run_sweep
 
     fits = {}
     for label, task, setting, bw_gb in specs:
@@ -92,8 +96,8 @@ def run_problems_batched(specs: Sequence[tuple], methods: Sequence[str],
             f = fits[label]
             by_shape.setdefault((f.group_size, f.num_accels), []).append(label)
         for labels in by_shape.values():
-            batch = magma_search_batch([fits[la] for la in labels],
-                                       budget=budget, seeds=seed_list)
+            batch = run_sweep([fits[la] for la in labels],
+                              budget=budget, seeds=seed_list, sweep=sweep)
             for i, la in enumerate(labels):
                 out[la]["magma"] = float(batch.best_fitness[i].mean())
 

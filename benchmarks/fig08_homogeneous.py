@@ -2,8 +2,9 @@
 all mappers.  Validation: MAGMA >= every baseline (paper: geomean 1.4x
 over Herald-like / 1.41x over AI-MT-like, 1.6x over other optimizers).
 
-MAGMA runs all four tasks x all seeds as ONE device-resident
-``magma_search_batch`` call (the tables share (G, A))."""
+MAGMA runs all four tasks x all seeds as one ``repro.core.sweep`` grid
+(the tables share (G, A)), sharded across however many devices are
+visible."""
 from __future__ import annotations
 
 from benchmarks.common import (print_normalized, resolve,

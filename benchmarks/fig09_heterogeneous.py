@@ -3,7 +3,8 @@ BW=256) on Vision and Mix.  Validation: MAGMA best everywhere; AI-MT-like
 (homogeneous-targeted) collapses on heterogeneous settings.
 
 MAGMA batches per setting (scenarios sharing (G, A) stack): the two tasks
-x all seeds of each setting run as one ``magma_search_batch`` call."""
+x all seeds of each setting run as one device-sharded ``repro.core.sweep``
+grid."""
 from __future__ import annotations
 
 from benchmarks.common import (print_normalized, resolve,

@@ -11,19 +11,19 @@ from repro.workloads import build_task_groups
 from repro.core.job_analyzer import JobAnalyzer
 
 
-def run(budget, group_size=100, seeds=1):
-    from repro.core.magma import magma_search_batch
+def run(budget, group_size=100, seeds=1, sweep=None):
+    from repro.core.sweep import run_sweep
 
     print("== Fig 13: S3/S4/S5 x BW (Mix, MAGMA), normalized to S5 ==")
     results = {1.0: {}, 256.0: {}}
     group = build_task_groups("Mix", group_size=group_size, seed=0)[0]
-    # per setting, both BW scenarios x all seeds run as one batched call
-    # (same job tables, different bw_sys)
+    # per setting, both BW scenarios x all seeds run as one sweep (same
+    # job tables, different bw_sys), sharded across visible devices
     for setting in ("S3", "S4", "S5"):
         fits = [M3E(accel=get_setting(setting), bw_sys=bw * GB).prepare(group)
                 for bw in (1.0, 256.0)]
-        batch = magma_search_batch(fits, budget=budget,
-                                   seeds=list(range(seeds)))
+        batch = run_sweep(fits, budget=budget, seeds=list(range(seeds)),
+                          sweep=sweep)
         for i, bw in enumerate((1.0, 256.0)):
             results[bw][setting] = float(batch.best_fitness[i].mean())
     for bw, row in results.items():

@@ -15,19 +15,19 @@ from repro.workloads import build_task_groups
 
 
 def run(budget, sizes=(4, 20, 50, 100, 200), seeds=1):
-    from repro.core.magma import magma_search_batch
+    from repro.core.sweep import run_sweep
 
     m3e = M3E(accel=get_setting("S2"), bw_sys=16 * GB)
     print("== Fig 17: group size sweep (Mix, S2, BW=16) ==")
     print("group_size,throughput_GFLOPs")
     out = {}
     for gs in sizes:
-        # group sizes change G, so each size is its own (vmapped-over-
-        # seeds) device-resident batch
+        # group sizes change G, so each size is its own sweep (the seed
+        # axis shards across visible devices)
         group = build_task_groups("Mix", group_size=gs, seed=0)[0]
         cfg = MagmaConfig(population=min(gs, 100))
-        batch = magma_search_batch([m3e.prepare(group)], budget=budget,
-                                   cfg=cfg, seeds=list(range(seeds)))
+        batch = run_sweep([m3e.prepare(group)], budget=budget,
+                          cfg=cfg, seeds=list(range(seeds)))
         out[gs] = float(batch.best_fitness[0].mean())
         print(f"{gs},{out[gs] / 1e9:.2f}")
     big = [v for k, v in out.items() if k >= 50]

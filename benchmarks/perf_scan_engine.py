@@ -107,9 +107,18 @@ def run(budget=10_000, group_size=16, seeds=4):
 def main():
     ap = std_parser(__doc__)
     ap.set_defaults(group_size=16, seeds=4)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the timings as JSON (CI artifact)")
     args = ap.parse_args()
     budget = 10_000 if args.full else args.budget
-    run(budget, args.group_size, args.seeds)
+    out = run(budget, args.group_size, args.seeds)
+    if args.json:
+        import json
+        out.update(bench="perf_scan_engine", budget=budget,
+                   group_size=args.group_size, seeds=args.seeds)
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -49,18 +49,21 @@ def main():
           f"{warm.best_fitness / 1e9:.2f} GFLOPs/s "
           f"(vs full-search level {fits['magma'] / 1e9:.2f})")
 
-    # device-resident scenario sweep: a BW grid x 2 seeds as ONE compiled
-    # XLA call (Fig. 12-style sweep via magma_search_batch)
-    from repro.core.magma import magma_search_batch
+    # device-resident scenario sweep: a BW grid x 2 seeds through
+    # repro.core.sweep — sharded across however many devices are visible
+    # (try XLA_FLAGS=--xla_force_host_platform_device_count=8), one
+    # vmapped XLA call per chunk (Fig. 12-style sweep)
+    from repro.core.sweep import run_sweep
     import time
     bws = (0.5, 1.0, 4.0, 16.0)
     sweep_fits = [M3E(accel=get_setting(args.setting), bw_sys=b * GB
                       ).prepare(groups[0]) for b in bws]
     t0 = time.perf_counter()
-    batch = magma_search_batch(sweep_fits, budget=args.budget, seeds=(0, 1))
+    batch = run_sweep(sweep_fits, budget=args.budget, seeds=(0, 1))
     dt = time.perf_counter() - t0
-    print(f"\nbatched BW sweep ({len(bws)} scenarios x 2 seeds, "
-          f"one compiled call, {dt:.1f}s):")
+    print(f"\nbatched BW sweep ({len(bws)} scenarios x 2 seeds on "
+          f"{batch.num_devices} device(s), {batch.num_chunks} compiled "
+          f"call(s), {dt:.1f}s):")
     for i, b in enumerate(bws):
         mean = batch.best_fitness[i].mean() / 1e9
         print(f"  BW={b:5.1f} GB/s   {mean:9.2f} GFLOPs/s")

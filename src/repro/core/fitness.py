@@ -110,6 +110,36 @@ def stack_fitness_params(fns: Sequence["FitnessFn"]) -> FitnessParams:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *[f.params for f in fns])
 
 
+def normalize_scenarios(scenarios, num_accels: Optional[int] = None,
+                        use_kernel: bool = False):
+    """Validate a scenario grid into ``(params, num_accels, use_kernel,
+    objective)``.
+
+    ``scenarios`` is either an already-stacked ``FitnessParams`` (leading
+    scenario axis; ``num_accels`` required) or a sequence of same-shape
+    ``FitnessFn``s, which are stacked here.  ``objective`` comes back as
+    the shared static objective name when every scenario agrees (so dead
+    branches compile away), else ``None`` (per-scenario traced select).
+    """
+    if isinstance(scenarios, FitnessParams):
+        if num_accels is None:
+            raise ValueError("num_accels is required with raw FitnessParams")
+        return scenarios, num_accels, use_kernel, None
+    fns = list(scenarios)
+    params = stack_fitness_params(fns)
+    num_accels = fns[0].num_accels
+    kernels = {f.use_kernel for f in fns}
+    if len(kernels) > 1:
+        raise ValueError(
+            "scenarios must agree on use_kernel: the kernel and jnp "
+            "simulators only match to ~1e-4, so a mixed batch cannot "
+            "keep the bit-for-bit standalone guarantee")
+    use_kernel = use_kernel or kernels.pop()
+    objectives = {f.objective for f in fns}
+    objective = objectives.pop() if len(objectives) == 1 else None
+    return params, num_accels, use_kernel, objective
+
+
 @dataclasses.dataclass
 class FitnessFn:
     table: JobAnalysisTable

@@ -34,7 +34,10 @@ across seeds and across stacked scenario tables (same ``(G, A)`` shape;
 different ``lat``/``bw``/``bw_sys``/objective), so Fig. 8/9/13/17-style
 (workload x accelerator x objective) grids run as one XLA program.
 Row ``[s, k]`` of the batched result is bit-identical to a standalone
-``magma_search`` on scenario ``s`` with seed ``seeds[k]``.
+``magma_search`` on scenario ``s`` with seed ``seeds[k]``.  Grid
+execution lives in ``repro.core.sweep``: with multiple devices visible
+the rows shard across a 1-D mesh via ``shard_map``, and oversized grids
+stream through in double-buffered chunks — same bit-for-bit guarantee.
 """
 from __future__ import annotations
 
@@ -48,8 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.encoding import Population, random_population
-from repro.core.fitness import (FitnessFn, FitnessParams, evaluate_params,
-                                stack_fitness_params)
+from repro.core.fitness import FitnessFn, FitnessParams, evaluate_params
 
 
 @dataclasses.dataclass(frozen=True)
@@ -339,7 +341,12 @@ def _scan_search_batched(keys, params: FitnessParams, cfg: MagmaConfig,
                          num_accels: int, n_elite: int, generations: int,
                          evolve_last: bool, pop_size: int, group_size: int,
                          use_kernel: bool, objective: Optional[str]):
-    """keys: (K, 2) PRNG keys; params: FitnessParams stacked along axis 0
+    """Legacy nested-vmap grid engine (vmap over seeds inside vmap over
+    scenarios).  ``magma_search_batch`` now routes through
+    ``repro.core.sweep`` (flattened rows, device-sharded); this stays as
+    the parity reference the sweep is tested bit-identical against.
+
+    keys: (K, 2) PRNG keys; params: FitnessParams stacked along axis 0
     (S scenarios).  Returns scan outputs with leading (S, K) axes.
     ``objective`` is the shared static objective, or None when the
     scenarios mix objectives (then the traced per-scenario code selects
@@ -419,57 +426,24 @@ def magma_search_batch(scenarios: Union[Sequence[FitnessFn], FitnessParams],
                        seeds: Sequence[int] = (0,),
                        num_accels: Optional[int] = None,
                        use_kernel: bool = False) -> BatchSearchResult:
-    """Run S x K device-resident searches as ONE compiled XLA call.
+    """Run an S x K grid of device-resident searches in a handful of
+    compiled XLA calls (one, when the grid fits on the devices at hand).
 
     ``scenarios`` is a sequence of same-shape ``FitnessFn``s (stacked
     automatically) or an already-stacked ``FitnessParams`` with a leading
     scenario axis (then ``num_accels`` is required).  ``seeds`` vmaps the
     search across PRNG seeds.  Row ``[s, k]`` matches a standalone
     ``magma_search(scenarios[s], seed=seeds[k])`` bit-for-bit.
+
+    Routes through ``repro.core.sweep.run_sweep``: with several devices
+    visible the grid is sharded across them (``shard_map`` over a 1-D
+    mesh); on one device it runs as the classic single vmapped call.  Use
+    ``run_sweep`` directly for chunked streaming of oversized grids or
+    explicit device control.
     """
-    cfg = cfg or MagmaConfig()
-    objective = None
-    if isinstance(scenarios, FitnessParams):
-        params = scenarios
-        if num_accels is None:
-            raise ValueError("num_accels is required with raw FitnessParams")
-    else:
-        fns = list(scenarios)
-        params = stack_fitness_params(fns)
-        num_accels = fns[0].num_accels
-        kernels = {f.use_kernel for f in fns}
-        if len(kernels) > 1:
-            raise ValueError(
-                "scenarios must agree on use_kernel: the kernel and jnp "
-                "simulators only match to ~1e-4, so a mixed batch cannot "
-                "keep the bit-for-bit standalone guarantee")
-        use_kernel = use_kernel or kernels.pop()
-        objectives = {f.objective for f in fns}
-        if len(objectives) == 1:       # shared objective: skip dead branches
-            objective = objectives.pop()
-    G = int(params.lat.shape[-2])
-    P = cfg.population
-    n_elite = max(1, int(round(cfg.elite_frac * P)))
-    generations, evolve_last = _search_plan(budget, cfg)
-
-    seeds = np.asarray(list(seeds), dtype=np.int64)
-    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
-
-    t0 = time.perf_counter()
-    bf, ba, bp, hist = _scan_search_batched(
-        keys, params, cfg, num_accels, n_elite, generations, evolve_last,
-        P, G, use_kernel, objective)
-    jax.block_until_ready(hist)
-    wall = time.perf_counter() - t0
-
-    return BatchSearchResult(
-        best_fitness=np.asarray(bf),
-        best_accel=np.asarray(ba), best_prio=np.asarray(bp),
-        history_samples=P * np.arange(1, generations + 1),
-        history_best=np.asarray(hist),
-        n_samples=P * generations, wall_time_s=wall,
-        seeds=seeds,
-    )
+    from repro.core.sweep import run_sweep
+    return run_sweep(scenarios, budget=budget, cfg=cfg, seeds=seeds,
+                     num_accels=num_accels, use_kernel=use_kernel)
 
 
 # ---------------------------------------------------------------------------

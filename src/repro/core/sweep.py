@@ -1,0 +1,262 @@
+"""Fleet-scale scenario sweeps — shard (scenario x seed) MAGMA grids
+across devices and stream oversized grids in double-buffered chunks.
+
+The paper's headline experiments (Fig. 8/9/13/17) are grids of many
+independent searches: S stacked scenario tables (same ``(G, A)``,
+different ``lat``/``bw``/``bw_sys``/objective) x K PRNG seeds.  The
+device-resident engine already fuses such a grid into one vmapped XLA
+call; this module scales that call out:
+
+  1. the grid is flattened to ``N = S*K`` rows — row ``s*K + k`` is
+     scenario ``s`` with seed ``seeds[k]`` — and evaluated by a single
+     ``jax.vmap`` of the scanned per-row search;
+  2. with more than one device the vmapped search is wrapped in
+     ``shard_map`` over a 1-D ``repro.dist.sharding.flat_mesh``, so each
+     device runs its contiguous slice of rows SPMD (rows are
+     embarrassingly parallel: no collectives).  On a single device the
+     same vmapped function runs unsharded — the fallback is the code
+     path, not a reimplementation;
+  3. grids larger than device memory stream through the mesh in fixed-
+     size chunks: while chunk ``i`` computes, chunk ``i+1`` is already
+     being ``jax.device_put`` (async host->device transfer overlaps
+     compute), so a bounded device footprint costs one compiled call per
+     chunk, not per row.
+
+Rows are padded (by repeating the last real row) so every chunk has the
+same shape — one executable serves the whole stream — and padding is
+sliced off before results reshape back to ``(S, K)``.  Every row is
+bit-identical to a standalone ``magma_search`` with the same scenario
+and seed, across device counts and chunk sizes (tests/test_sweep.py).
+
+``magma_search_batch`` and ``benchmarks.common.run_problems_batched``
+route through :func:`run_sweep`; ``benchmarks/perf_sweep.py`` measures
+it and emits ``BENCH_sweep.json``.  CPU CI exercises the sharded path
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.core.encoding import random_population
+from repro.core.fitness import (FitnessFn, FitnessParams, evaluate_params,
+                                normalize_scenarios)
+from repro.core.magma import (BatchSearchResult, MagmaConfig, _scan_search,
+                              _search_plan)
+from repro.dist.sharding import flat_mesh
+
+SWEEP_AXIS = "sweep"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """How a scenario grid is partitioned across devices and time.
+
+    chunk_rows   max (scenario, seed) rows resident per compiled call;
+                 None runs the whole grid as one chunk.  Rounded up to a
+                 multiple of the device count so every shard is dense.
+    max_devices  shard over at most this many devices (None: all
+                 available).  ``max_devices=1`` forces the single-device
+                 vmapped path — the reference the sharded path is tested
+                 bit-identical against.
+    """
+    chunk_rows: Optional[int] = None
+    max_devices: Optional[int] = None
+
+
+@dataclasses.dataclass
+class SweepResult(BatchSearchResult):
+    """BatchSearchResult plus how the grid was executed."""
+    num_devices: int = 1
+    rows: int = 0                  # real (scenario, seed) rows
+    padded_rows: int = 0           # rows actually computed (incl. padding)
+    chunk_rows: int = 0            # rows per compiled call
+    chunk_wall_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def num_chunks(self) -> int:
+        return len(self.chunk_wall_s)
+
+    @property
+    def generations(self) -> int:
+        return int(self.history_samples.shape[0])
+
+    def gens_per_sec(self) -> List[float]:
+        """Aggregate generations/second per chunk (all rows of the chunk
+        advance one generation together)."""
+        return [self.chunk_rows * self.generations / max(w, 1e-12)
+                for w in self.chunk_wall_s]
+
+
+def _row_search(key, params, cfg: MagmaConfig, num_accels: int, n_elite: int,
+                generations: int, evolve_last: bool, pop_size: int,
+                group_size: int, use_kernel: bool, objective: Optional[str]):
+    """One (scenario, seed) row — identical trace to the engine in
+    ``magma.py``: seed the population from the row key, run the scanned
+    search.  Bit-for-bit parity with standalone ``magma_search`` depends
+    on this key-split order; don't reorder."""
+    key, k0 = jax.random.split(key)
+    pop = random_population(k0, pop_size, group_size, num_accels)
+
+    def eval_fn(a, pr):
+        return evaluate_params(params, a, pr, num_accels=num_accels,
+                               use_kernel=use_kernel, objective=objective)
+
+    out = _scan_search(key, pop.accel, pop.prio, eval_fn, cfg, num_accels,
+                       n_elite, generations, evolve_last)
+    return out[:4]       # (best_fit, best_accel, best_prio, history)
+
+
+@lru_cache(maxsize=None)
+def _chunk_fn(mesh, cfg: MagmaConfig, num_accels: int, n_elite: int,
+              generations: int, evolve_last: bool, pop_size: int,
+              group_size: int, use_kernel: bool, objective: Optional[str]):
+    """Compiled (rows_keys, rows_params) -> per-row results, cached so
+    repeated sweeps with the same mesh/shape reuse one executable.
+    ``mesh is None`` is the single-device fallback: the same vmapped
+    search, just not wrapped in shard_map."""
+    search = jax.vmap(partial(
+        _row_search, cfg=cfg, num_accels=num_accels, n_elite=n_elite,
+        generations=generations, evolve_last=evolve_last, pop_size=pop_size,
+        group_size=group_size, use_kernel=use_kernel, objective=objective))
+    if mesh is None:
+        return jax.jit(search)
+    spec = PartitionSpec(SWEEP_AXIS)
+    return jax.jit(shard_map(search, mesh=mesh,
+                             in_specs=(spec, spec), out_specs=spec))
+
+
+@lru_cache(maxsize=None)
+def _sweep_mesh(num_devices: int):
+    """Meshes cached by size: a fresh Mesh per call would miss the jit
+    cache keyed on it."""
+    return flat_mesh(num_devices, SWEEP_AXIS)
+
+
+def _flatten_grid(params: FitnessParams, keys: np.ndarray):
+    """(S scenarios, K seeds) -> N=S*K host-resident rows, scenario-major.
+
+    Host numpy on purpose: chunks of an oversized grid must live on host
+    until their ``device_put`` — materializing the whole grid on device
+    is exactly what chunked streaming avoids.
+
+    Each scenario's tables are replicated per seed (the legacy nested
+    vmap broadcast them instead).  Deliberate trade-off: uniform rows
+    keep sharding/chunking/padding trivial and bit-parity auditable,
+    and the (G, A) tables are KB-scale next to the per-row population
+    and history state that actually bounds chunk_rows."""
+    S = int(params.lat.shape[0])
+    K = int(keys.shape[0])
+    rows_params = jax.tree.map(
+        lambda x: np.repeat(np.asarray(x), K, axis=0), params)
+    rows_keys = np.tile(keys, (S, 1))
+    return rows_params, rows_keys, S * K
+
+
+def _pad_rows(rows_params, rows_keys, total: int):
+    """Pad to ``total`` rows by repeating the last real row (valid data:
+    padding must simulate cleanly, its results are sliced off)."""
+    pad = total - rows_keys.shape[0]
+    if pad <= 0:
+        return rows_params, rows_keys
+    rep = lambda x: np.concatenate([x, np.repeat(x[-1:], pad, axis=0)])
+    return jax.tree.map(rep, rows_params), rep(rows_keys)
+
+
+def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
+              budget: int = 10_000,
+              cfg: MagmaConfig | None = None,
+              seeds: Sequence[int] = (0,),
+              num_accels: Optional[int] = None,
+              use_kernel: bool = False,
+              sweep: SweepConfig | None = None) -> SweepResult:
+    """Run an S x K (scenario x seed) MAGMA grid sharded across devices.
+
+    ``scenarios``/``num_accels``/``use_kernel`` follow
+    ``magma_search_batch`` (which is now a thin wrapper over this).  The
+    grid is partitioned per ``sweep`` (:class:`SweepConfig`); results come
+    back with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to
+    ``magma_search(scenarios[s], seed=seeds[k])`` regardless of device
+    count or chunking.
+    """
+    cfg = cfg or MagmaConfig()
+    sweep = sweep or SweepConfig()
+    params, num_accels, use_kernel, objective = normalize_scenarios(
+        scenarios, num_accels, use_kernel)
+    S = int(params.lat.shape[0])
+    G = int(params.lat.shape[-2])
+    P = cfg.population
+    n_elite = max(1, int(round(cfg.elite_frac * P)))
+    generations, evolve_last = _search_plan(budget, cfg)
+
+    seeds = np.asarray(list(seeds), dtype=np.int64)
+    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
+    rows_params, rows_keys, N = _flatten_grid(params, keys)
+
+    avail = len(jax.devices())
+    ndev = avail if sweep.max_devices is None else max(1, min(
+        sweep.max_devices, avail))
+    ndev = min(ndev, N)              # never more shards than real rows
+    mesh = None if ndev == 1 else _sweep_mesh(ndev)
+
+    chunk_rows = N if sweep.chunk_rows is None else max(1, sweep.chunk_rows)
+    chunk_rows = min(chunk_rows, N)
+    chunk_rows = -(-chunk_rows // ndev) * ndev        # dense shards
+    n_chunks = -(-N // chunk_rows)
+    padded = n_chunks * chunk_rows   # last partial chunk reuses the same
+    rows_params, rows_keys = _pad_rows(rows_params, rows_keys, padded)
+
+    target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
+              if mesh is not None else jax.devices()[0])
+    fn = _chunk_fn(mesh, cfg, num_accels, n_elite, generations, evolve_last,
+                   P, G, use_kernel, objective)
+
+    def put_chunk(i):
+        sl = slice(i * chunk_rows, (i + 1) * chunk_rows)
+        return (jax.device_put(rows_keys[sl], target),
+                jax.device_put(jax.tree.map(lambda x: x[sl], rows_params),
+                               target))
+
+    t0 = time.perf_counter()
+    outs, walls = [], []
+    buf = put_chunk(0)
+    for i in range(n_chunks):
+        # double buffer: enqueue the NEXT chunk's host->device transfer
+        # before dispatching this chunk's compute, so the copy overlaps it
+        nxt = put_chunk(i + 1) if i + 1 < n_chunks else None
+        tc = time.perf_counter()
+        out = fn(*buf)
+        jax.block_until_ready(out)
+        walls.append(time.perf_counter() - tc)
+        # results go to host immediately: keeping them on device would
+        # grow the footprint with the whole grid, not just the chunk
+        outs.append(tuple(np.asarray(o) for o in out))
+        buf = nxt
+    wall = time.perf_counter() - t0
+
+    def gather(j, trailing):
+        flat = np.concatenate([o[j] for o in outs])[:N]
+        return flat.reshape((S, len(seeds)) + trailing)
+
+    return SweepResult(
+        best_fitness=gather(0, ()),
+        best_accel=gather(1, (G,)),
+        best_prio=gather(2, (G,)),
+        history_samples=P * np.arange(1, generations + 1),
+        history_best=gather(3, (generations,)),
+        n_samples=P * generations,
+        wall_time_s=wall,
+        seeds=seeds,
+        num_devices=ndev,
+        rows=N,
+        padded_rows=padded,
+        chunk_rows=chunk_rows,
+        chunk_wall_s=walls,
+    )

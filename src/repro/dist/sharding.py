@@ -60,6 +60,20 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
                          devices=devices)
 
 
+def flat_mesh(num_devices: Optional[int] = None, axis_name: str = "data",
+              devices=None) -> Mesh:
+    """1-D mesh over the first ``num_devices`` available devices.
+
+    The data-parallel shape used for embarrassingly parallel work
+    (``repro.core.sweep`` shards scenario grids over it); ``num_devices``
+    is clamped to what the platform actually has, so callers can ask for
+    "all of them" (None) or a bound without counting devices first."""
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs) if num_devices is None else max(1, min(num_devices,
+                                                         len(devs)))
+    return make_mesh((n,), (axis_name,), devices=devs[:n])
+
+
 def batch_axes(mesh) -> Tuple[str, ...]:
     """Mesh axes the batch dim spans: ('pod', 'data') filtered to the mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
