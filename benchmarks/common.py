@@ -14,7 +14,7 @@ from typing import Dict, List, Sequence
 import numpy as np
 
 from repro.core import M3E, geomean
-from repro.core.m3e import METHODS
+from repro.core.strategies import get_strategy, run_strategy
 from repro.costmodel import get_setting
 from repro.workloads import build_task_groups
 
@@ -69,15 +69,17 @@ def run_problems_batched(specs: Sequence[tuple], methods: Sequence[str],
                          sweep=None) -> Dict[str, Dict[str, float]]:
     """Best fitness per method over a GRID of problems.
 
-    ``specs`` is a list of ``(label, task, setting, bw_gb)``.  MAGMA runs
-    through ``repro.core.sweep``: every group of problems sharing an
-    accelerator setting (same ``(G, A)`` tables) plus all seeds execute
-    as one sweep — sharded across however many devices are visible
-    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fakes a fleet
-    on CPU) and falling back to the classic single vmapped call on one.
-    Pass ``sweep=SweepConfig(chunk_rows=...)`` to stream grids bigger
-    than device memory.  The baseline methods keep their per-problem host
-    loops (they are host-driven optimizers).  Returns
+    ``specs`` is a list of ``(label, task, setting, bw_gb)``.  Every
+    **device-resident** strategy (MAGMA and the black-box ports — see
+    ``repro.core.strategies.available(device_resident=True)``) runs
+    through ``repro.core.sweep``: per method, every group of problems
+    sharing an accelerator setting (same ``(G, A)`` tables) plus all
+    seeds execute as one sweep — sharded across however many devices are
+    visible (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` fakes
+    a fleet on CPU) and falling back to the classic single vmapped call
+    on one.  Pass ``sweep=SweepConfig(chunk_rows=...)`` to stream grids
+    bigger than device memory.  Host-only methods (cmaes/tbpsa/RL/
+    heuristics) keep their per-problem host loops.  Returns
     ``{label: {method: mean best fitness}}``.
     """
     from repro.core.sweep import run_sweep
@@ -90,24 +92,26 @@ def run_problems_batched(specs: Sequence[tuple], methods: Sequence[str],
     out: Dict[str, Dict[str, float]] = {label: {} for label, *_ in specs}
 
     seed_list = list(range(seed0, seed0 + seeds))
-    if "magma" in methods:
-        by_shape: Dict[tuple, list] = {}
-        for label, *_ in specs:
-            f = fits[label]
-            by_shape.setdefault((f.group_size, f.num_accels), []).append(label)
-        for labels in by_shape.values():
-            batch = run_sweep([fits[la] for la in labels],
-                              budget=budget, seeds=seed_list, sweep=sweep)
-            for i, la in enumerate(labels):
-                out[la]["magma"] = float(batch.best_fitness[i].mean())
+    by_shape: Dict[tuple, list] = {}
+    for label, *_ in specs:
+        f = fits[label]
+        by_shape.setdefault((f.group_size, f.num_accels), []).append(label)
 
     for method in methods:
-        if method == "magma":
-            continue
-        for label, *_ in specs:
-            vals = [METHODS[method](fits[label], budget, s).best_fitness
-                    for s in seed_list]
-            out[label][method] = float(np.mean(vals))
+        strategy = get_strategy(method)
+        if strategy.device_resident:
+            for labels in by_shape.values():
+                batch = run_sweep([fits[la] for la in labels],
+                                  budget=budget, seeds=seed_list, sweep=sweep,
+                                  strategy=strategy)
+                for i, la in enumerate(labels):
+                    out[la][method] = float(batch.best_fitness[i].mean())
+        else:
+            for label, *_ in specs:
+                vals = [run_strategy(strategy, fits[label], budget=budget,
+                                     seed=s).best_fitness
+                        for s in seed_list]
+                out[label][method] = float(np.mean(vals))
     # restore the requested method order per problem
     return {label: {m: out[label][m] for m in methods} for label, *_ in specs}
 

@@ -6,12 +6,15 @@ from repro.core.job_analyzer import JobAnalyzer, JobAnalysisTable, table_from_ar
 from repro.core.fitness import FitnessFn
 from repro.core.magma import MagmaConfig, SearchResult, magma_search
 from repro.core.warmstart import WarmStartEngine
-from repro.core.m3e import M3E, METHODS, geomean
+from repro.core.strategies import (SearchStrategy, available, get_strategy,
+                                   run_strategy)
+from repro.core.m3e import M3E, geomean
 
 __all__ = [
     "Individual", "Population", "decode", "decode_to_lists", "random_population",
     "simulate", "simulate_decoded", "simulate_numpy", "simulate_population",
     "throughput", "JobAnalyzer", "JobAnalysisTable", "table_from_arrays",
     "FitnessFn", "MagmaConfig", "SearchResult", "magma_search",
-    "WarmStartEngine", "M3E", "METHODS", "geomean",
+    "SearchStrategy", "available", "get_strategy", "run_strategy",
+    "WarmStartEngine", "M3E", "geomean",
 ]

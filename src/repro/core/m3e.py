@@ -3,40 +3,35 @@
 Wires together: Job Analyzer -> Job Analysis Table -> (encoder, decoder,
 BW allocator, fitness) -> a chosen optimization method -> best mapping.
 
-Methods registry mirrors Table IV; every method receives the same jitted
-FitnessFn and the same sampling budget, exactly the paper's protocol.
+Method dispatch goes through the ``repro.core.strategies`` registry
+(Table IV's lineup: MAGMA plus black-box, RL, and heuristic baselines);
+every method receives the same jitted fitness and the same sampling
+budget, exactly the paper's protocol.  Device-resident strategies run as
+one compiled scan (and batch/shard via ``repro.core.sweep``); host-only
+methods run their own loops behind the same ``SearchResult`` contract.
+Unknown method names raise a ``ValueError`` listing what is registered,
+and kwargs a method does not accept are rejected instead of silently
+swallowed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
-from repro.core import heuristics, rl
 from repro.core.encoding import decode_to_lists
 from repro.core.fitness import FitnessFn
 from repro.core.job_analyzer import JobAnalysisTable, JobAnalyzer
 from repro.core.magma import MagmaConfig, SearchResult, magma_search
-from repro.core.optimizers import blackbox
+from repro.core.strategies import get_strategy, run_strategy
 from repro.core.warmstart import WarmStartEngine
 from repro.costmodel.accelerators import AcceleratorConfig
 from repro.workloads.benchmark import JobGroup
 
-METHODS: Dict[str, Callable] = {
-    "magma": lambda fit, budget, seed, **kw: magma_search(fit, budget, seed=seed, **kw),
-    "stdga": lambda fit, budget, seed, **kw: blackbox.std_ga(fit, budget, seed),
-    "de": lambda fit, budget, seed, **kw: blackbox.differential_evolution(fit, budget, seed),
-    "cmaes": lambda fit, budget, seed, **kw: blackbox.cma_es(fit, budget, seed),
-    "tbpsa": lambda fit, budget, seed, **kw: blackbox.tbpsa(fit, budget, seed),
-    "pso": lambda fit, budget, seed, **kw: blackbox.pso(fit, budget, seed),
-    "random": lambda fit, budget, seed, **kw: blackbox.random_search(fit, budget, seed),
-    "a2c": lambda fit, budget, seed, **kw: rl.a2c(fit, budget, seed),
-    "ppo2": lambda fit, budget, seed, **kw: rl.ppo2(fit, budget, seed),
-    "herald_like": lambda fit, budget, seed, **kw: heuristics.herald_like(fit),
-    "ai_mt_like": lambda fit, budget, seed, **kw: heuristics.ai_mt_like(fit),
-}
+# kwargs consumed by the run, not the strategy constructor
+_RUN_KWARGS = ("init_population", "keep_population", "engine")
 
 
 @dataclasses.dataclass
@@ -56,18 +51,21 @@ class M3E:
     def search(self, group: JobGroup, method: str = "magma",
                budget: int = 10_000, seed: int = 0, **kw) -> SearchResult:
         fit = self.prepare(group)
-        if method == "magma" and self.warm_start is not None:
+        run_kw = {k: kw.pop(k) for k in _RUN_KWARGS if k in kw}
+        strategy = get_strategy(method, **kw)
+        if strategy.name == "magma" and self.warm_start is not None:
             init = self.warm_start.init_population(
                 group.task, jax.random.PRNGKey(seed + 1),
                 fit.group_size, fit.num_accels)
             if init is not None:
-                kw.setdefault("init_population", init)
-            kw.setdefault("keep_population", True)
-            res = METHODS[method](fit, budget, seed, **kw)
+                run_kw.setdefault("init_population", init)
+            run_kw.setdefault("keep_population", True)
+            res = run_strategy(strategy, fit, budget=budget, seed=seed,
+                               **run_kw)
             if res.final_population is not None:
                 self.warm_start.remember(group.task, res.final_population)
             return res
-        return METHODS[method](fit, budget, seed, **kw)
+        return run_strategy(strategy, fit, budget=budget, seed=seed, **run_kw)
 
     def describe_mapping(self, res: SearchResult) -> list:
         return decode_to_lists(res.best_accel, res.best_prio,

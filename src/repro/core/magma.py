@@ -21,7 +21,12 @@ Engines
 The search is **device-resident**: the entire generation loop is folded
 into a single ``jax.lax.scan`` whose carry holds ``(PRNG key, population,
 best_fitness, best_individual)`` on device, emitting the per-generation
-best-so-far curve as scan outputs.  One compiled XLA call executes the
+best-so-far curve as scan outputs.  Since the strategy refactor the scan
+itself lives in ``repro.core.strategies`` (MAGMA is the ask/tell
+``MagmaStrategy`` over ``_next_generation_body``, run by the shared
+``scan_strategy`` driver — bit-identical to the original engine, which
+survives here as the ``_scan_search`` parity reference and the
+``engine='loop'`` host loop).  One compiled XLA call executes the
 whole search — no per-generation dispatch or host sync (the legacy
 per-generation Python loop is kept as ``engine='loop'`` for regression
 and benchmarking; on the 2-core CPU container the scanned engine is
@@ -321,20 +326,6 @@ def _scan_search(key, accel0, prio0, eval_fn, cfg: MagmaConfig,
 
 
 @partial(jax.jit, static_argnames=("cfg", "num_accels", "n_elite",
-                                   "generations", "evolve_last",
-                                   "use_kernel", "objective"))
-def _scan_search_single(key, accel0, prio0, params: FitnessParams,
-                        cfg: MagmaConfig, num_accels: int, n_elite: int,
-                        generations: int, evolve_last: bool,
-                        use_kernel: bool, objective: str):
-    def eval_fn(a, p):
-        return evaluate_params(params, a, p, num_accels=num_accels,
-                               use_kernel=use_kernel, objective=objective)
-    return _scan_search(key, accel0, prio0, eval_fn, cfg, num_accels,
-                        n_elite, generations, evolve_last)
-
-
-@partial(jax.jit, static_argnames=("cfg", "num_accels", "n_elite",
                                    "generations", "evolve_last", "pop_size",
                                    "group_size", "use_kernel", "objective"))
 def _scan_search_batched(keys, params: FitnessParams, cfg: MagmaConfig,
@@ -367,10 +358,10 @@ def _scan_search_batched(keys, params: FitnessParams, cfg: MagmaConfig,
 
 
 def _search_plan(budget: int, cfg: MagmaConfig):
-    """(generations, evolve_last): legacy-loop budget semantics."""
-    P = cfg.population
-    generations = max(1, budget // P)
-    return generations, generations * P < budget
+    """(generations, evolve_last): legacy-loop budget semantics — one
+    definition, shared with every strategy via the driver."""
+    from repro.core.strategies.driver import plan_generations
+    return plan_generations(budget, cfg.population)
 
 
 def magma_search(fitness_fn: FitnessFn, budget: int = 10_000,
@@ -381,9 +372,12 @@ def magma_search(fitness_fn: FitnessFn, budget: int = 10_000,
     """Run MAGMA for ``budget`` fitness evaluations (paper: 10K).
 
     ``engine='scan'`` (default) runs the whole search device-resident as
-    one compiled call; ``engine='loop'`` is the legacy per-generation host
-    loop (one dispatch + host sync per generation), kept for regression
-    and benchmarking.  Both produce identical results for a given seed.
+    one compiled call — since the strategy refactor it is a thin wrapper
+    over ``repro.core.strategies.run_strategy`` with the MAGMA ask/tell
+    strategy, which traces the exact same op sequence; ``engine='loop'``
+    is the legacy per-generation host loop (one dispatch + host sync per
+    generation), kept for regression and benchmarking.  Both produce
+    identical results for a given seed.
     """
     cfg = cfg or MagmaConfig()
     if engine == "loop":
@@ -392,32 +386,10 @@ def magma_search(fitness_fn: FitnessFn, budget: int = 10_000,
     if engine != "scan":
         raise ValueError(f"unknown engine {engine!r}")
 
-    key = jax.random.PRNGKey(seed)
-    P = cfg.population
-    n_elite = max(1, int(round(cfg.elite_frac * P)))
-    G, A = fitness_fn.group_size, fitness_fn.num_accels
-
-    key, k0 = jax.random.split(key)
-    pop = init_population if init_population is not None else \
-        random_population(k0, P, G, A)
-    generations, evolve_last = _search_plan(budget, cfg)
-
-    t0 = time.perf_counter()
-    bf, ba, bp, hist, f_accel, f_prio = _scan_search_single(
-        key, pop.accel, pop.prio, fitness_fn.params, cfg, A, n_elite,
-        generations, evolve_last, fitness_fn.use_kernel, fitness_fn.objective)
-    jax.block_until_ready(hist)
-    wall = time.perf_counter() - t0
-
-    return SearchResult(
-        best_fitness=float(bf),
-        best_accel=np.asarray(ba), best_prio=np.asarray(bp),
-        history_samples=P * np.arange(1, generations + 1),
-        history_best=np.asarray(hist, dtype=np.float64),
-        n_samples=P * generations, wall_time_s=wall,
-        final_population=Population(accel=f_accel, prio=f_prio)
-        if keep_population else None,
-    )
+    from repro.core.strategies import MagmaStrategy, run_strategy
+    return run_strategy(MagmaStrategy(cfg), fitness_fn, budget=budget,
+                        seed=seed, init_population=init_population,
+                        keep_population=keep_population)
 
 
 def magma_search_batch(scenarios: Union[Sequence[FitnessFn], FitnessParams],

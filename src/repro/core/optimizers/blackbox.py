@@ -12,6 +12,14 @@ These are deliberately the *standard* algorithms — the paper's point is that
 MAGMA's domain-aware operators beat them on this search space.  CMA-ES and
 TBPSA are faithful-in-structure reimplementations (full covariance CMA;
 population-size-adaptive ES), not bindings to nevergrad.
+
+Role since the strategy refactor: ``random``/``std_ga``/``de``/``pso``
+have device-resident ask/tell ports in ``repro.core.strategies.blackbox``
+(same algorithms and Table-IV hyper-parameters, jax PRNG instead of
+numpy) which is what ``M3E.search`` and the sweeps now run; the host
+loops here stay as the executable parity references.  ``cma_es`` and
+``tbpsa`` remain the live implementations, registered host-only
+(``repro.core.strategies.host`` explains why).
 """
 from __future__ import annotations
 

@@ -1,0 +1,35 @@
+"""Unified ask/tell search-strategy API.
+
+Every optimization method behind one interface (``SearchStrategy``:
+``init``/``ask``/``tell`` over pure pytree state), one device-resident
+scan driver (``run_strategy``) and one registry (``get_strategy`` /
+``available`` / ``register``) — the successor of the old ``m3e.METHODS``
+lambda dict.  Device-resident strategies (magma, random, stdga, de, pso)
+fold whole searches into single compiled calls and ride
+``repro.core.sweep.run_sweep(strategy=...)`` sharded across devices;
+host-only methods (cmaes, tbpsa, a2c, ppo2, the hand heuristics) run
+their own loops behind the same ``SearchResult`` contract.
+
+    from repro.core.strategies import get_strategy, run_strategy, available
+    res = run_strategy(get_strategy("de"), fitness_fn, budget=10_000, seed=0)
+"""
+from repro.core.strategies.base import (HostSearchStrategy, SearchStrategy,
+                                        decode_continuous)
+from repro.core.strategies.registry import (StrategyInfo, available,
+                                            canonical_name, get_strategy,
+                                            register, strategy_info)
+from repro.core.strategies.driver import (plan_generations, run_strategy,
+                                          scan_strategy)
+from repro.core.strategies.magma_strategy import MagmaState, MagmaStrategy
+from repro.core.strategies.blackbox import (DEStrategy, PSOStrategy,
+                                            RandomStrategy, StdGAStrategy)
+from repro.core.strategies import host as _host  # registers host-only methods
+
+__all__ = [
+    "SearchStrategy", "HostSearchStrategy", "decode_continuous",
+    "StrategyInfo", "available", "canonical_name", "get_strategy",
+    "register", "strategy_info",
+    "plan_generations", "run_strategy", "scan_strategy",
+    "MagmaState", "MagmaStrategy",
+    "DEStrategy", "PSOStrategy", "RandomStrategy", "StdGAStrategy",
+]

@@ -1,0 +1,114 @@
+"""The ``SearchStrategy`` protocol — every optimizer as ask/tell pytree state.
+
+A strategy is a frozen (hashable) configuration object plus three pure
+functions over a jittable pytree state:
+
+  ``init(key, params) -> state``            seed the state from a PRNG key
+  ``ask(state) -> (state, accel, prio)``    propose ``ask_size`` candidates
+  ``tell(state, fitness) -> state``         fold the candidates' fitness in
+
+Because the state is a pytree and the methods are pure JAX, one shared
+``lax.scan`` driver (:func:`repro.core.strategies.driver.run_strategy`)
+runs ANY strategy device-resident — a whole search is one compiled XLA
+call — and ``repro.core.sweep.run_sweep(strategy=...)`` shards
+(method x scenario x seed) grids across devices exactly as it does for
+MAGMA.  Host-only methods (adaptive population sizes, RL training loops)
+implement :class:`HostSearchStrategy` instead and the registry records
+them as ``device_resident=False``.
+
+PRNG convention (reproducibility across hosts/devices/jit boundaries):
+the state carries the key.  ``init`` receives ``jax.random.PRNGKey(seed)``
+and every consumer of randomness splits off the carried key —
+``key, sub = jax.random.split(state.key)`` — storing ``key`` back.  No
+host RNG ever feeds a device strategy, so the same seed gives the same
+trajectory everywhere; ``tests/test_strategies.py`` pins best-fitness
+values per strategy to gate this.
+
+Strategies are *bound* to a problem before running: :meth:`bind` returns
+a copy with ``num_accels`` filled in (it is a static field, so the jit
+cache is keyed per accelerator count — intended: the decode bounds
+change the trace).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+class SearchStrategy:
+    """Base class / protocol for ask-tell search strategies.
+
+    Concrete strategies are frozen dataclasses (hashable -> usable as jit
+    static arguments; equal configs share one compiled executable).
+    """
+
+    # plain class attributes, NOT dataclass fields (subclasses override)
+    name = "?"
+    device_resident = True
+
+    @property
+    def ask_size(self) -> int:
+        """Candidates proposed per ``ask`` (drives budget -> generations)."""
+        raise NotImplementedError
+
+    def bind(self, num_accels: int) -> "SearchStrategy":
+        """Return this strategy bound to a problem's accelerator count."""
+        if getattr(self, "num_accels", None) == num_accels:
+            return self
+        return dataclasses.replace(self, num_accels=num_accels)
+
+    # -- pure JAX, called under jit/scan/vmap ------------------------------
+    def init(self, key, params, *, init_population=None) -> Any:
+        raise NotImplementedError
+
+    def ask(self, state) -> Tuple[Any, jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    def tell(self, state, fitness: jnp.ndarray) -> Any:
+        raise NotImplementedError
+
+    def population(self, state):
+        """Final population (for warm-start hand-off), or None."""
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSearchStrategy(SearchStrategy):
+    """A host-loop searcher behind the strategy interface.
+
+    Wraps ``fn(fitness_fn, budget, seed) -> SearchResult`` — methods whose
+    control flow cannot fold into a fixed-shape ``lax.scan`` (adaptive
+    population sizes, RL training loops, one-shot heuristics).  The
+    registry lists these as ``device_resident=False``; ``run_strategy``
+    dispatches them to the host loop and ``run_sweep`` rejects them.
+    """
+
+    name: str = "?"
+    fn: Optional[Callable] = None
+    device_resident = False
+
+    @property
+    def ask_size(self) -> int:
+        raise ValueError(f"strategy {self.name!r} is host-only; it has no "
+                         "fixed ask size")
+
+    def bind(self, num_accels: int) -> "HostSearchStrategy":
+        return self
+
+    def search(self, fitness_fn, budget: int, seed: int):
+        return self.fn(fitness_fn, budget, seed)
+
+
+def decode_continuous(X: jnp.ndarray, num_accels: int):
+    """(P, 2G) continuous in [0, 1] -> (accel (P, G) int32, prio (P, G) f32).
+
+    The same relaxation the host baselines use
+    (``repro.core.optimizers.base.decode_x``): the first G dims floor to
+    the accel-selection genome, the last G are the priority genome.
+    """
+    G = X.shape[-1] // 2
+    accel = jnp.minimum((X[..., :G] * num_accels).astype(jnp.int32),
+                        num_accels - 1)
+    return accel, X[..., G:].astype(jnp.float32)

@@ -1,0 +1,254 @@
+"""Device-resident ports of the black-box baselines (Table IV).
+
+Each strategy re-implements the corresponding host-loop optimizer in
+``repro.core.optimizers.blackbox`` — which stays as the executable parity
+reference — as pure-JAX ask/tell state, so baseline-vs-MAGMA comparison
+grids (Fig. 11, Table IV) compile into the same scanned/sharded sweeps
+MAGMA uses.  All four operate on the continuous relaxation x in
+[0, 1]^{2G} (``decode_continuous``), with Table IV's hyper-parameters:
+
+  random   uniform re-draw every generation
+  stdga    whole-genome single-point crossover 0.1 + uniform mutation 0.1
+  de       DE/rand/1/bin, F = CR = 0.8
+  pso      w_global = w_parent = 0.8, momentum 1.6
+
+The host and device versions share algorithms and hyper-parameters but
+not PRNG streams (numpy PCG64 vs jax threefry), so they match in
+convergence behaviour, not bitwise; the bitwise guarantee the tests pin
+is device scan == host-stepped loop of the SAME strategy, plus one
+best-fitness regression value per strategy (seed discipline: the state
+carries the key, see ``strategies.base``).
+
+CMA-ES and TBPSA are *not* ported: TBPSA's population size adapts at
+run time (no fixed-shape scan) and CMA-ES's per-generation
+eigendecomposition in float32 degrades the covariance update, so both
+stay host-only and the registry says so (``available(device_resident=
+False)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies.base import SearchStrategy, decode_continuous
+from repro.core.strategies.registry import register
+
+
+class RandomState(NamedTuple):
+    key: jax.Array
+    X: jnp.ndarray           # (P, 2G) the batch the next ask proposes
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomStrategy(SearchStrategy):
+    """Uniform random search: every generation is a fresh uniform batch."""
+
+    population: int = 100
+    num_accels: Optional[int] = None
+    name = "random"
+
+    @property
+    def ask_size(self) -> int:
+        return self.population
+
+    def init(self, key, params, *, init_population=None) -> RandomState:
+        if init_population is not None:
+            raise ValueError("random search takes no init_population")
+        key, k0 = jax.random.split(key)
+        X = jax.random.uniform(k0, (self.population,
+                                    2 * params.lat.shape[-2]))
+        return RandomState(key=key, X=X)
+
+    def ask(self, state: RandomState):
+        return state, *decode_continuous(state.X, self.num_accels)
+
+    def tell(self, state: RandomState, fitness) -> RandomState:
+        key, k = jax.random.split(state.key)
+        return RandomState(key=key, X=jax.random.uniform(k, state.X.shape))
+
+
+class StdGAState(NamedTuple):
+    key: jax.Array
+    X: jnp.ndarray           # (P, 2G)
+
+
+@dataclasses.dataclass(frozen=True)
+class StdGAStrategy(SearchStrategy):
+    """Standard GA: whole-genome single-point crossover + uniform mutation."""
+
+    population: int = 100
+    mutation_rate: float = 0.1
+    crossover_rate: float = 0.1
+    elite_frac: float = 0.1
+    num_accels: Optional[int] = None
+    name = "stdga"
+
+    @property
+    def ask_size(self) -> int:
+        return self.population
+
+    @property
+    def n_elite(self) -> int:
+        return max(1, int(self.elite_frac * self.population))
+
+    def init(self, key, params, *, init_population=None) -> StdGAState:
+        if init_population is not None:
+            raise ValueError("stdga takes no init_population")
+        key, k0 = jax.random.split(key)
+        X = jax.random.uniform(k0, (self.population,
+                                    2 * params.lat.shape[-2]))
+        return StdGAState(key=key, X=X)
+
+    def ask(self, state: StdGAState):
+        return state, *decode_continuous(state.X, self.num_accels)
+
+    def tell(self, state: StdGAState, fitness) -> StdGAState:
+        P, d = state.X.shape
+        n_elite = self.n_elite
+        n_child = P - n_elite
+        elites = state.X[jnp.argsort(-fitness)[:n_elite]]
+
+        key, kd, km, kc, kp, kmask, kmut = jax.random.split(state.key, 7)
+        dads = elites[jax.random.randint(kd, (n_child,), 0, n_elite)]
+        moms = elites[jax.random.randint(km, (n_child,), 0, n_elite)]
+        do_cross = jax.random.uniform(kc, (n_child, 1)) < self.crossover_rate
+        pivot = jax.random.randint(kp, (n_child, 1), 1, max(d, 2))
+        child = jnp.where(do_cross & (jnp.arange(d)[None, :] >= pivot),
+                          moms, dads)
+        mut = jax.random.uniform(kmask, (n_child, d)) < self.mutation_rate
+        child = jnp.where(mut, jax.random.uniform(kmut, (n_child, d)), child)
+        return StdGAState(key=key, X=jnp.concatenate([elites, child]))
+
+
+class DEState(NamedTuple):
+    key: jax.Array
+    X: jnp.ndarray           # (P, 2G) current population
+    fit: jnp.ndarray         # (P,) its fitness (-inf before evaluation)
+    trial: jnp.ndarray       # (P, 2G) the batch the last ask proposed
+
+
+@dataclasses.dataclass(frozen=True)
+class DEStrategy(SearchStrategy):
+    """DE/rand/1/bin; ``ask`` proposes trials, ``tell`` greedily selects."""
+
+    population: int = 100
+    f_weight: float = 0.8
+    cr: float = 0.8
+    num_accels: Optional[int] = None
+    name = "de"
+
+    @property
+    def ask_size(self) -> int:
+        return self.population
+
+    def init(self, key, params, *, init_population=None) -> DEState:
+        if init_population is not None:
+            raise ValueError("de takes no init_population")
+        key, k0 = jax.random.split(key)
+        X = jax.random.uniform(k0, (self.population,
+                                    2 * params.lat.shape[-2]))
+        # fit = -inf: the first tell accepts every trial unconditionally
+        return DEState(key=key, X=X,
+                       fit=jnp.full((self.population,), -jnp.inf), trial=X)
+
+    def ask(self, state: DEState):
+        P, d = state.X.shape
+        key, ki, kc, kj = jax.random.split(state.key, 4)
+        # three distinct donors per row (may coincide with the row itself,
+        # like the numpy reference's rng.choice(P, 3, replace=False))
+        idx = jax.vmap(lambda k: jax.random.choice(k, P, (3,),
+                                                   replace=False))(
+            jax.random.split(ki, P))
+        a, b, c = (state.X[idx[:, 0]], state.X[idx[:, 1]],
+                   state.X[idx[:, 2]])
+        mutant = jnp.clip(a + self.f_weight * (b - c), 0.0, 1.0)
+        cross = jax.random.uniform(kc, (P, d)) < self.cr
+        jrand = jax.random.randint(kj, (P,), 0, d)
+        cross = cross | (jnp.arange(d)[None, :] == jrand[:, None])
+        trial = jnp.where(cross, mutant, state.X)
+        state = DEState(key=key, X=state.X, fit=state.fit, trial=trial)
+        return state, *decode_continuous(trial, self.num_accels)
+
+    def tell(self, state: DEState, fitness) -> DEState:
+        better = fitness > state.fit
+        return DEState(
+            key=state.key,
+            X=jnp.where(better[:, None], state.trial, state.X),
+            fit=jnp.where(better, fitness, state.fit),
+            trial=state.trial)
+
+
+class PSOState(NamedTuple):
+    key: jax.Array
+    X: jnp.ndarray           # (P, 2G) positions
+    V: jnp.ndarray           # (P, 2G) velocities
+    pbest: jnp.ndarray       # (P, 2G)
+    pbest_f: jnp.ndarray     # (P,)
+    gbest: jnp.ndarray       # (2G,)
+    gbest_f: jnp.ndarray     # ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PSOStrategy(SearchStrategy):
+    """Particle swarm with personal/global attraction and momentum."""
+
+    population: int = 100
+    w_global: float = 0.8
+    w_parent: float = 0.8
+    momentum: float = 1.6
+    num_accels: Optional[int] = None
+    name = "pso"
+
+    @property
+    def ask_size(self) -> int:
+        return self.population
+
+    def init(self, key, params, *, init_population=None) -> PSOState:
+        if init_population is not None:
+            raise ValueError("pso takes no init_population")
+        key, kx, kv = jax.random.split(key, 3)
+        P, d = self.population, 2 * params.lat.shape[-2]
+        X = jax.random.uniform(kx, (P, d))
+        V = (jax.random.uniform(kv, (P, d)) - 0.5) * 0.1
+        return PSOState(key=key, X=X, V=V, pbest=X,
+                        pbest_f=jnp.full((P,), -jnp.inf),
+                        gbest=X[0], gbest_f=jnp.float32(-jnp.inf))
+
+    def ask(self, state: PSOState):
+        return state, *decode_continuous(state.X, self.num_accels)
+
+    def tell(self, state: PSOState, fitness) -> PSOState:
+        imp = fitness > state.pbest_f
+        pbest = jnp.where(imp[:, None], state.X, state.pbest)
+        pbest_f = jnp.where(imp, fitness, state.pbest_f)
+        i = jnp.argmax(fitness)
+        better = fitness[i] > state.gbest_f
+        gbest = jnp.where(better, state.X[i], state.gbest)
+        gbest_f = jnp.where(better, fitness[i], state.gbest_f)
+
+        key, kr = jax.random.split(state.key)
+        r = jax.random.uniform(kr, (2,) + state.X.shape)
+        V = (self.momentum * state.V
+             + self.w_parent * r[0] * (pbest - state.X)
+             + self.w_global * r[1] * (gbest[None, :] - state.X))
+        V = jnp.clip(V, -0.5, 0.5)
+        X = jnp.clip(state.X + V, 0.0, 1.0)
+        return PSOState(key=key, X=X, V=V, pbest=pbest, pbest_f=pbest_f,
+                        gbest=gbest, gbest_f=gbest_f)
+
+
+register("random", RandomStrategy, device_resident=True,
+         description="uniform random search on the continuous relaxation",
+         figures="Table IV; Fig. 11")
+register("stdga", StdGAStrategy, device_resident=True, aliases=("std_ga",),
+         description="standard GA, crossover 0.1 / mutation 0.1 (Table IV)",
+         figures="Table IV; Fig. 11")
+register("de", DEStrategy, device_resident=True,
+         description="differential evolution DE/rand/1/bin, F=CR=0.8",
+         figures="Table IV; Fig. 11")
+register("pso", PSOStrategy, device_resident=True,
+         description="particle swarm, w=0.8/0.8, momentum 1.6 (Table IV)",
+         figures="Table IV; Fig. 11")

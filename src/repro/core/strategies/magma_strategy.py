@@ -1,0 +1,81 @@
+"""MAGMA behind the ask/tell interface — a thin adapter over the existing
+generation body.
+
+``ask`` returns the current population unchanged; ``tell`` splits the
+carried key and runs ``repro.core.magma._next_generation_body`` (elitism
++ the paper's four operators, batched).  Run through the shared scan
+driver this traces the exact op sequence of the original device-resident
+engine, so results are **bit-identical** to ``magma_search`` — the legacy
+``engine='loop'`` / ``_scan_search`` paths remain in ``repro.core.magma``
+as the regression references gating that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import Population, random_population
+from repro.core.magma import MagmaConfig, _next_generation_body
+from repro.core.strategies.base import SearchStrategy
+from repro.core.strategies.registry import register
+
+
+class MagmaState(NamedTuple):
+    key: jax.Array
+    accel: jnp.ndarray   # (P, G) int32
+    prio: jnp.ndarray    # (P, G) float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MagmaStrategy(SearchStrategy):
+    """MAGMA's GA as an ask/tell strategy (Section V operators)."""
+
+    cfg: MagmaConfig = MagmaConfig()
+    num_accels: Optional[int] = None     # bound per problem via .bind()
+    name = "magma"
+
+    @property
+    def ask_size(self) -> int:
+        return self.cfg.population
+
+    @property
+    def n_elite(self) -> int:
+        return max(1, int(round(self.cfg.elite_frac * self.cfg.population)))
+
+    def init(self, key, params, *, init_population=None) -> MagmaState:
+        # same key discipline as magma_search: split once, draw the
+        # population from the sub-key (the split happens even with an
+        # explicit init_population, preserving the warm-start trace)
+        key, k0 = jax.random.split(key)
+        if init_population is not None:
+            pop = Population(*init_population)
+        else:
+            pop = random_population(k0, self.cfg.population,
+                                    params.lat.shape[-2], self.num_accels)
+        return MagmaState(key=key, accel=pop.accel, prio=pop.prio)
+
+    def ask(self, state: MagmaState):
+        return state, state.accel, state.prio
+
+    def tell(self, state: MagmaState, fitness: jnp.ndarray) -> MagmaState:
+        key, kg = jax.random.split(state.key)
+        accel, prio = _next_generation_body(
+            kg, state.accel, state.prio, fitness, self.cfg,
+            self.num_accels, self.n_elite)
+        return MagmaState(key=key, accel=accel, prio=prio)
+
+    def population(self, state: MagmaState) -> Population:
+        return Population(accel=state.accel, prio=state.prio)
+
+
+def _magma_factory(cfg: Optional[MagmaConfig] = None) -> MagmaStrategy:
+    return MagmaStrategy(cfg=cfg or MagmaConfig())
+
+
+register("magma", _magma_factory, device_resident=True,
+         description="MAGMA GA: elitism + the paper's four domain-aware "
+                     "operators (mutation, crossover-gen/-rg/-accel)",
+         figures="every figure; Table IV")

@@ -1,11 +1,16 @@
-"""Fleet-scale scenario sweeps — shard (scenario x seed) MAGMA grids
-across devices and stream oversized grids in double-buffered chunks.
+"""Fleet-scale scenario sweeps — shard (strategy, scenario x seed) search
+grids across devices and stream oversized grids in double-buffered chunks.
 
-The paper's headline experiments (Fig. 8/9/13/17) are grids of many
-independent searches: S stacked scenario tables (same ``(G, A)``,
-different ``lat``/``bw``/``bw_sys``/objective) x K PRNG seeds.  The
-device-resident engine already fuses such a grid into one vmapped XLA
-call; this module scales that call out:
+The paper's headline experiments (Fig. 8/9/11/13/17, Table IV) are grids
+of many independent searches: S stacked scenario tables (same ``(G, A)``,
+different ``lat``/``bw``/``bw_sys``/objective) x K PRNG seeds — times a
+method axis for the comparison figures.  Any **device-resident**
+``repro.core.strategies`` strategy rides the same machinery
+(``run_sweep(strategy=...)``; MAGMA is the default), so every
+method-vs-method comparison executes as compiled, sharded sweeps rather
+than sequential host searches.  The device-resident engine already fuses
+one strategy's grid into one vmapped XLA call; this module scales that
+call out:
 
   1. the grid is flattened to ``N = S*K`` rows — row ``s*K + k`` is
      scenario ``s`` with seed ``seeds[k]`` — and evaluated by a single
@@ -45,11 +50,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.encoding import random_population
 from repro.core.fitness import (FitnessFn, FitnessParams, evaluate_params,
                                 normalize_scenarios)
-from repro.core.magma import (BatchSearchResult, MagmaConfig, _scan_search,
-                              _search_plan)
+from repro.core.magma import BatchSearchResult, MagmaConfig
+from repro.core.strategies import (MagmaStrategy, SearchStrategy, available,
+                                   get_strategy, plan_generations,
+                                   scan_strategy)
 from repro.dist.sharding import flat_mesh
 
 SWEEP_AXIS = "sweep"
@@ -95,37 +101,36 @@ class SweepResult(BatchSearchResult):
                 for w in self.chunk_wall_s]
 
 
-def _row_search(key, params, cfg: MagmaConfig, num_accels: int, n_elite: int,
-                generations: int, evolve_last: bool, pop_size: int,
-                group_size: int, use_kernel: bool, objective: Optional[str]):
-    """One (scenario, seed) row — identical trace to the engine in
-    ``magma.py``: seed the population from the row key, run the scanned
-    search.  Bit-for-bit parity with standalone ``magma_search`` depends
-    on this key-split order; don't reorder."""
-    key, k0 = jax.random.split(key)
-    pop = random_population(k0, pop_size, group_size, num_accels)
-
+def _row_search(key, params, strategy: SearchStrategy, generations: int,
+                evolve_last: bool, group_size: int, use_kernel: bool,
+                objective: Optional[str]):
+    """One (scenario, seed) row — identical trace to ``run_strategy``'s
+    scanned engine: seed the strategy state from the row key, run the
+    shared scan.  Bit-for-bit parity with a standalone search depends on
+    the strategy's ``init`` key-split order; don't reorder."""
     def eval_fn(a, pr):
-        return evaluate_params(params, a, pr, num_accels=num_accels,
+        return evaluate_params(params, a, pr, num_accels=strategy.num_accels,
                                use_kernel=use_kernel, objective=objective)
 
-    out = _scan_search(key, pop.accel, pop.prio, eval_fn, cfg, num_accels,
-                       n_elite, generations, evolve_last)
+    state = strategy.init(key, params)
+    out = scan_strategy(strategy, state, eval_fn, group_size, generations,
+                        evolve_last)
     return out[:4]       # (best_fit, best_accel, best_prio, history)
 
 
 @lru_cache(maxsize=None)
-def _chunk_fn(mesh, cfg: MagmaConfig, num_accels: int, n_elite: int,
-              generations: int, evolve_last: bool, pop_size: int,
-              group_size: int, use_kernel: bool, objective: Optional[str]):
+def _chunk_fn(mesh, strategy: SearchStrategy, generations: int,
+              evolve_last: bool, group_size: int, use_kernel: bool,
+              objective: Optional[str]):
     """Compiled (rows_keys, rows_params) -> per-row results, cached so
-    repeated sweeps with the same mesh/shape reuse one executable.
-    ``mesh is None`` is the single-device fallback: the same vmapped
-    search, just not wrapped in shard_map."""
+    repeated sweeps with the same mesh/shape/strategy reuse one
+    executable (strategies are frozen dataclasses: equal configs hash
+    equal).  ``mesh is None`` is the single-device fallback: the same
+    vmapped search, just not wrapped in shard_map."""
     search = jax.vmap(partial(
-        _row_search, cfg=cfg, num_accels=num_accels, n_elite=n_elite,
-        generations=generations, evolve_last=evolve_last, pop_size=pop_size,
-        group_size=group_size, use_kernel=use_kernel, objective=objective))
+        _row_search, strategy=strategy, generations=generations,
+        evolve_last=evolve_last, group_size=group_size,
+        use_kernel=use_kernel, objective=objective))
     if mesh is None:
         return jax.jit(search)
     spec = PartitionSpec(SWEEP_AXIS)
@@ -170,31 +175,64 @@ def _pad_rows(rows_params, rows_keys, total: int):
     return jax.tree.map(rep, rows_params), rep(rows_keys)
 
 
+def _resolve_strategy(strategy, cfg: Optional[MagmaConfig]) -> SearchStrategy:
+    """``strategy`` may be None (MAGMA, configured by ``cfg``), a registry
+    name, or a ``SearchStrategy`` instance (then ``cfg`` must be None —
+    instances carry their own config)."""
+    if strategy is None:
+        return MagmaStrategy(cfg or MagmaConfig())
+    if isinstance(strategy, str):
+        if cfg is not None:
+            return get_strategy(strategy, cfg=cfg)   # magma accepts cfg;
+        return get_strategy(strategy)                # others reject it clearly
+    if not isinstance(strategy, SearchStrategy):
+        raise ValueError(f"strategy must be None, a registry name, or a "
+                         f"SearchStrategy; got {type(strategy).__name__}")
+    if cfg is not None:
+        raise ValueError("pass cfg only with the default MAGMA strategy (or "
+                         "strategy='magma'); strategy instances carry their "
+                         "own config")
+    return strategy
+
+
 def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
               budget: int = 10_000,
               cfg: MagmaConfig | None = None,
               seeds: Sequence[int] = (0,),
               num_accels: Optional[int] = None,
               use_kernel: bool = False,
-              sweep: SweepConfig | None = None) -> SweepResult:
-    """Run an S x K (scenario x seed) MAGMA grid sharded across devices.
+              sweep: SweepConfig | None = None,
+              strategy: Union[SearchStrategy, str, None] = None
+              ) -> SweepResult:
+    """Run an S x K (scenario x seed) search grid sharded across devices.
 
     ``scenarios``/``num_accels``/``use_kernel`` follow
-    ``magma_search_batch`` (which is now a thin wrapper over this).  The
-    grid is partitioned per ``sweep`` (:class:`SweepConfig`); results come
-    back with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to
-    ``magma_search(scenarios[s], seed=seeds[k])`` regardless of device
-    count or chunking.
+    ``magma_search_batch`` (which is now a thin wrapper over this).
+    ``strategy`` selects the optimizer: None runs MAGMA (configured by
+    ``cfg``), a registry name or any device-resident
+    ``repro.core.strategies.SearchStrategy`` runs that method instead —
+    same sharding, chunking, and bit-identity guarantees.  Host-only
+    strategies are rejected with a ``ValueError``.  The grid is
+    partitioned per ``sweep`` (:class:`SweepConfig`); results come back
+    with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to a
+    standalone ``run_strategy(strategy, scenarios[s], seed=seeds[k])``
+    (for MAGMA: ``magma_search``) regardless of device count or chunking.
     """
-    cfg = cfg or MagmaConfig()
     sweep = sweep or SweepConfig()
     params, num_accels, use_kernel, objective = normalize_scenarios(
         scenarios, num_accels, use_kernel)
+    strategy = _resolve_strategy(strategy, cfg)
+    if not strategy.device_resident:
+        raise ValueError(
+            f"strategy {strategy.name!r} is host-only and cannot ride the "
+            f"device-resident sweep; run it per problem via run_strategy/"
+            f"M3E.search, or pick one of "
+            f"{', '.join(available(device_resident=True))}")
+    strategy = strategy.bind(num_accels)
     S = int(params.lat.shape[0])
     G = int(params.lat.shape[-2])
-    P = cfg.population
-    n_elite = max(1, int(round(cfg.elite_frac * P)))
-    generations, evolve_last = _search_plan(budget, cfg)
+    P = strategy.ask_size
+    generations, evolve_last = plan_generations(budget, P)
 
     seeds = np.asarray(list(seeds), dtype=np.int64)
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
@@ -215,8 +253,8 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
 
     target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
               if mesh is not None else jax.devices()[0])
-    fn = _chunk_fn(mesh, cfg, num_accels, n_elite, generations, evolve_last,
-                   P, G, use_kernel, objective)
+    fn = _chunk_fn(mesh, strategy, generations, evolve_last, G, use_kernel,
+                   objective)
 
     def put_chunk(i):
         sl = slice(i * chunk_rows, (i + 1) * chunk_rows)

@@ -165,11 +165,12 @@ class MultiTenantEngine:
 
     def schedule(self, jobs: Sequence[ServeJob],
                  method: Optional[str] = None) -> Dict:
-        from repro.core.m3e import METHODS
+        from repro.core.strategies import get_strategy, run_strategy
         table = self.analyze(jobs)
         fit = FitnessFn(table, bw_sys=self.system_bw)
         method = method or self.method
-        res: SearchResult = METHODS[method](fit, self.budget, self.seed)
+        res: SearchResult = run_strategy(get_strategy(method), fit,
+                                         budget=self.budget, seed=self.seed)
         local = decode_to_lists(res.best_accel, res.best_prio,
                                 len(self.submeshes))
         makespan = simulate_numpy(local, table.lat, table.bw, self.system_bw)
