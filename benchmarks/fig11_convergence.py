@@ -36,6 +36,8 @@ def _mean_curve(method: str, fit, budget: int, seeds) -> np.ndarray:
 
 def run(budget, methods, group_size=100, seeds=1):
     seed_list = list(range(seeds))
+    report = {"bench": "fig11_convergence", "budget": budget,
+              "group_size": group_size, "num_seeds": seeds, "problems": {}}
     for task, setting in (("Vision", "S2"), ("Mix", "S3")):
         m3e = M3E(accel=get_setting(setting), bw_sys=16 * GB)
         group = build_task_groups(task, group_size=group_size, seed=0)[0]
@@ -43,22 +45,37 @@ def run(budget, methods, group_size=100, seeds=1):
         print(f"\n== Fig 11: ({task}, {setting}, BW=16), "
               f"{seeds} seed(s) ==")
         print("method,samples_curve...,final")
-        finals = {}
+        finals, curves = {}, {}
         for method in methods:
             curve = _mean_curve(method, fit, budget, seed_list)
             pts = np.linspace(0, len(curve) - 1, 8).astype(int)
             spark = ",".join(f"{curve[i]:.3e}" for i in pts)
             print(f"{method},{spark}")
             finals[method] = float(curve[-1])
+            curves[method] = [float(c) for c in curve]
         best = max(finals, key=finals.get)
         print(f"best: {best}")
-    return finals
+        report["problems"][f"{task}/{setting}"] = {
+            "finals": finals, "best_method": best, "curves": curves}
+    return report
 
 
 def main():
-    args = std_parser(__doc__).parse_args()
+    import json
+    import time
+
+    ap = std_parser(__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the curves/finals as JSON "
+                         "(machine-readable, like the perf_* benchmarks)")
+    args = ap.parse_args()
     budget, methods = resolve(args)
-    run(budget, methods, args.group_size, args.seeds)
+    report = run(budget, methods, args.group_size, args.seeds)
+    if args.json:
+        report["unix_time"] = time.time()
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

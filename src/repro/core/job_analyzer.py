@@ -3,17 +3,48 @@
 Profiles every (job, sub-accelerator) pair once with the cost model and
 caches the result; inside the optimization loop the table is a pure lookup
 (exactly the paper's design — the cost model is never re-queried).
+
+Thread-safety contract
+----------------------
+``JobAnalyzer`` instances may be shared across host threads (the
+``repro.stream`` async analysis stage runs a bounded pool of workers over
+one analyzer per accelerator setting, so concurrent scenarios share one
+profile cache).  The cache is guarded by a lock around lookup+insert; the
+cost model itself is pure (``MaestroModel.profile`` touches no shared
+state), so a duplicated profile between check and insert is a wasted
+computation, never a wrong one.  Callers that want lock-free analyzers can
+instead give each worker its own ``JobAnalyzer`` — correctness is the
+same, only cache reuse differs.
 """
 from __future__ import annotations
 
+import threading
+from typing import Sequence, Tuple
+
 import dataclasses
-from typing import Sequence
 
 import numpy as np
 
-from repro.costmodel.accelerators import AcceleratorConfig
+from repro.costmodel.accelerators import AcceleratorConfig, SubAccelConfig
+from repro.costmodel.layers import LayerDesc
 from repro.costmodel.maestro import MaestroModel
 from repro.workloads.benchmark import Job
+
+
+def profile_key(layer: LayerDesc, sub: SubAccelConfig) -> Tuple:
+    """Hashable digest of exactly the fields the cost model reads.
+
+    Keying on the *cost-relevant* fields (and not, e.g., ``layer.name``)
+    means two layers with identical loop nests share one cache entry —
+    ResNet50's repeated bottleneck blocks profile once, not once per
+    block.  Both inputs are frozen dataclasses, so the digest is a stable
+    value snapshot: a caller that (illegitimately) built a new mutated
+    ``sub`` between calls gets a distinct key, never a stale profile.
+    """
+    return (layer.kind, layer.N, layer.K, layer.C, layer.Y, layer.X,
+            layer.R, layer.S, layer.stride, layer.bytes_per_elem,
+            sub.pe_h, sub.pe_w, sub.dataflow, sub.sg_bytes, sub.sl_bytes,
+            sub.freq_hz)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +71,19 @@ class JobAnalyzer:
         self.accel = accel
         self.model = model or MaestroModel()
         self._cache: dict = {}
+        self._lock = threading.Lock()
+
+    def _profile(self, layer: LayerDesc, sub: SubAccelConfig):
+        key = profile_key(layer, sub)
+        with self._lock:
+            prof = self._cache.get(key)
+        if prof is None:
+            # profile outside the lock: pure + idempotent, so a racing
+            # duplicate costs a redundant profile, not a wrong entry
+            prof = self.model.profile(layer, sub)
+            with self._lock:
+                prof = self._cache.setdefault(key, prof)
+        return prof
 
     def analyze(self, jobs: Sequence[Job]) -> JobAnalysisTable:
         A = self.accel.num_sub_accels
@@ -51,16 +95,17 @@ class JobAnalyzer:
         for g, job in enumerate(jobs):
             flops[g] = job.flops
             for a, sub in enumerate(self.accel.sub_accels):
-                key = (job.layer, sub)
-                prof = self._cache.get(key)
-                if prof is None:
-                    prof = self.model.profile(job.layer, sub)
-                    self._cache[key] = prof
+                prof = self._profile(job.layer, sub)
                 lat[g, a] = prof.no_stall_latency_s
                 bw[g, a] = prof.required_bw
                 energy[g, a] = prof.energy_j
         return JobAnalysisTable(lat=lat, bw=bw, flops=flops, num_accels=A,
                                 energy=energy)
+
+    @property
+    def cache_size(self) -> int:
+        with self._lock:
+            return len(self._cache)
 
 
 def table_from_arrays(lat, bw, flops, energy=None) -> JobAnalysisTable:

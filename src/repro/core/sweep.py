@@ -138,6 +138,28 @@ def _chunk_fn(mesh, strategy: SearchStrategy, generations: int,
                              in_specs=(spec, spec), out_specs=spec))
 
 
+def row_executable(strategy: SearchStrategy, generations: int,
+                   evolve_last: bool, group_size: int, use_kernel: bool,
+                   objective: Optional[str], num_devices: int):
+    """(compiled row-batch fn, device_put target) for ``num_devices``.
+
+    The public face of the chunk executable cache: ``repro.stream``'s
+    admission stage dispatches ready-scenario batches through the very
+    same compiled functions ``run_sweep`` uses, so a streamed scenario
+    cannot diverge from a batch sweep row.  The returned ``fn`` maps
+    ``(keys (N, 2), params with leading N)`` -> per-row results; call it
+    without blocking to overlap device compute with host-side analysis
+    (JAX dispatch is async), and ``jax.block_until_ready`` the outputs
+    when routing results.  ``N`` must be a multiple of ``num_devices``.
+    """
+    mesh = None if num_devices == 1 else _sweep_mesh(num_devices)
+    target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
+              if mesh is not None else jax.devices()[0])
+    fn = _chunk_fn(mesh, strategy, generations, evolve_last, group_size,
+                   use_kernel, objective)
+    return fn, target
+
+
 @lru_cache(maxsize=None)
 def _sweep_mesh(num_devices: int):
     """Meshes cached by size: a fresh Mesh per call would miss the jit
@@ -195,54 +217,53 @@ def _resolve_strategy(strategy, cfg: Optional[MagmaConfig]) -> SearchStrategy:
     return strategy
 
 
-def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
-              budget: int = 10_000,
-              cfg: MagmaConfig | None = None,
-              seeds: Sequence[int] = (0,),
-              num_accels: Optional[int] = None,
-              use_kernel: bool = False,
-              sweep: SweepConfig | None = None,
-              strategy: Union[SearchStrategy, str, None] = None
-              ) -> SweepResult:
-    """Run an S x K (scenario x seed) search grid sharded across devices.
+@dataclasses.dataclass
+class RowsResult:
+    """Per-row results of :func:`run_rows` (leading axis: the N real rows),
+    plus how the batch was executed.  ``run_sweep`` reshapes this into the
+    ``(S, K)`` grid view; ``repro.stream`` routes rows straight back to
+    their scenario requests."""
+    best_fitness: np.ndarray       # (N,)
+    best_accel: np.ndarray         # (N, G)
+    best_prio: np.ndarray          # (N, G)
+    history_best: np.ndarray       # (N, T)
+    generations: int
+    wall_time_s: float
+    num_devices: int = 1
+    rows: int = 0
+    padded_rows: int = 0
+    chunk_rows: int = 0
+    chunk_wall_s: List[float] = dataclasses.field(default_factory=list)
 
-    ``scenarios``/``num_accels``/``use_kernel`` follow
-    ``magma_search_batch`` (which is now a thin wrapper over this).
-    ``strategy`` selects the optimizer: None runs MAGMA (configured by
-    ``cfg``), a registry name or any device-resident
-    ``repro.core.strategies.SearchStrategy`` runs that method instead —
-    same sharding, chunking, and bit-identity guarantees.  Host-only
-    strategies are rejected with a ``ValueError``.  The grid is
-    partitioned per ``sweep`` (:class:`SweepConfig`); results come back
-    with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to a
-    standalone ``run_strategy(strategy, scenarios[s], seed=seeds[k])``
-    (for MAGMA: ``magma_search``) regardless of device count or chunking.
+
+def run_rows(rows_params: FitnessParams, rows_keys, *,
+             strategy: SearchStrategy, generations: int, evolve_last: bool,
+             use_kernel: bool = False, objective: Optional[str] = None,
+             sweep: SweepConfig | None = None) -> RowsResult:
+    """Execute N independent (scenario, key) search rows on the device
+    fleet — the execution core shared by :func:`run_sweep` (which flattens
+    an S x K grid into rows) and the ``repro.stream`` admission stage
+    (which batches whichever scenarios are ready, each with its own key).
+
+    ``rows_params`` is a ``FitnessParams`` with leading axis N (host
+    numpy leaves — chunks must stay on host until their ``device_put``);
+    ``rows_keys`` is ``(N, 2)`` raw PRNG key data.  ``strategy`` must
+    already be bound to the scenario's accelerator count.  Rows are
+    padded to dense shards / equal chunks by repeating the last real row
+    and the padding is sliced off, so row ``i`` of the result is
+    bit-identical to a standalone ``run_strategy`` with that scenario and
+    key, regardless of device count, chunking, or which other rows share
+    the batch.
     """
     sweep = sweep or SweepConfig()
-    params, num_accels, use_kernel, objective = normalize_scenarios(
-        scenarios, num_accels, use_kernel)
-    strategy = _resolve_strategy(strategy, cfg)
-    if not strategy.device_resident:
-        raise ValueError(
-            f"strategy {strategy.name!r} is host-only and cannot ride the "
-            f"device-resident sweep; run it per problem via run_strategy/"
-            f"M3E.search, or pick one of "
-            f"{', '.join(available(device_resident=True))}")
-    strategy = strategy.bind(num_accels)
-    S = int(params.lat.shape[0])
-    G = int(params.lat.shape[-2])
-    P = strategy.ask_size
-    generations, evolve_last = plan_generations(budget, P)
-
-    seeds = np.asarray(list(seeds), dtype=np.int64)
-    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
-    rows_params, rows_keys, N = _flatten_grid(params, keys)
+    rows_keys = np.asarray(rows_keys)
+    N = int(rows_keys.shape[0])
+    G = int(rows_params.lat.shape[-2])
 
     avail = len(jax.devices())
     ndev = avail if sweep.max_devices is None else max(1, min(
         sweep.max_devices, avail))
     ndev = min(ndev, N)              # never more shards than real rows
-    mesh = None if ndev == 1 else _sweep_mesh(ndev)
 
     chunk_rows = N if sweep.chunk_rows is None else max(1, sweep.chunk_rows)
     chunk_rows = min(chunk_rows, N)
@@ -251,10 +272,8 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
     padded = n_chunks * chunk_rows   # last partial chunk reuses the same
     rows_params, rows_keys = _pad_rows(rows_params, rows_keys, padded)
 
-    target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
-              if mesh is not None else jax.devices()[0])
-    fn = _chunk_fn(mesh, strategy, generations, evolve_last, G, use_kernel,
-                   objective)
+    fn, target = row_executable(strategy, generations, evolve_last, G,
+                                use_kernel, objective, ndev)
 
     def put_chunk(i):
         sl = slice(i * chunk_rows, (i + 1) * chunk_rows)
@@ -279,22 +298,78 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
         buf = nxt
     wall = time.perf_counter() - t0
 
-    def gather(j, trailing):
-        flat = np.concatenate([o[j] for o in outs])[:N]
-        return flat.reshape((S, len(seeds)) + trailing)
+    def gather(j):
+        return np.concatenate([o[j] for o in outs])[:N]
+
+    return RowsResult(
+        best_fitness=gather(0), best_accel=gather(1), best_prio=gather(2),
+        history_best=gather(3), generations=generations, wall_time_s=wall,
+        num_devices=ndev, rows=N, padded_rows=padded, chunk_rows=chunk_rows,
+        chunk_wall_s=walls,
+    )
+
+
+def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
+              budget: int = 10_000,
+              cfg: MagmaConfig | None = None,
+              seeds: Sequence[int] = (0,),
+              num_accels: Optional[int] = None,
+              use_kernel: bool = False,
+              sweep: SweepConfig | None = None,
+              strategy: Union[SearchStrategy, str, None] = None
+              ) -> SweepResult:
+    """Run an S x K (scenario x seed) search grid sharded across devices.
+
+    ``scenarios``/``num_accels``/``use_kernel`` follow
+    ``magma_search_batch`` (which is now a thin wrapper over this).
+    ``strategy`` selects the optimizer: None runs MAGMA (configured by
+    ``cfg``), a registry name or any device-resident
+    ``repro.core.strategies.SearchStrategy`` runs that method instead —
+    same sharding, chunking, and bit-identity guarantees.  Host-only
+    strategies are rejected with a ``ValueError``.  The grid is
+    partitioned per ``sweep`` (:class:`SweepConfig`); results come back
+    with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to a
+    standalone ``run_strategy(strategy, scenarios[s], seed=seeds[k])``
+    (for MAGMA: ``magma_search``) regardless of device count or chunking.
+    """
+    params, num_accels, use_kernel, objective = normalize_scenarios(
+        scenarios, num_accels, use_kernel)
+    strategy = _resolve_strategy(strategy, cfg)
+    if not strategy.device_resident:
+        raise ValueError(
+            f"strategy {strategy.name!r} is host-only and cannot ride the "
+            f"device-resident sweep; run it per problem via run_strategy/"
+            f"M3E.search, or pick one of "
+            f"{', '.join(available(device_resident=True))}")
+    strategy = strategy.bind(num_accels)
+    S = int(params.lat.shape[0])
+    G = int(params.lat.shape[-2])
+    P = strategy.ask_size
+    generations, evolve_last = plan_generations(budget, P)
+
+    seeds = np.asarray(list(seeds), dtype=np.int64)
+    keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
+    rows_params, rows_keys, N = _flatten_grid(params, keys)
+
+    rr = run_rows(rows_params, rows_keys, strategy=strategy,
+                  generations=generations, evolve_last=evolve_last,
+                  use_kernel=use_kernel, objective=objective, sweep=sweep)
+
+    def grid(x, trailing):
+        return x.reshape((S, len(seeds)) + trailing)
 
     return SweepResult(
-        best_fitness=gather(0, ()),
-        best_accel=gather(1, (G,)),
-        best_prio=gather(2, (G,)),
+        best_fitness=grid(rr.best_fitness, ()),
+        best_accel=grid(rr.best_accel, (G,)),
+        best_prio=grid(rr.best_prio, (G,)),
         history_samples=P * np.arange(1, generations + 1),
-        history_best=gather(3, (generations,)),
+        history_best=grid(rr.history_best, (generations,)),
         n_samples=P * generations,
-        wall_time_s=wall,
+        wall_time_s=rr.wall_time_s,
         seeds=seeds,
-        num_devices=ndev,
+        num_devices=rr.num_devices,
         rows=N,
-        padded_rows=padded,
-        chunk_rows=chunk_rows,
-        chunk_wall_s=walls,
+        padded_rows=rr.padded_rows,
+        chunk_rows=rr.chunk_rows,
+        chunk_wall_s=rr.chunk_wall_s,
     )

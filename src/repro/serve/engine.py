@@ -15,9 +15,17 @@ feature, hardware-adapted to TPU pods (DESIGN.md §3):
 The engine batches queued requests into dependency-free job groups,
 profiles them against every submesh, runs MAGMA over the (selection x
 priority) encoding, and returns the mapping + the BW-allocator timeline.
-``execute=True`` additionally runs the scheduled jobs for real (smoke-size
-models on CPU; the same code path drives TPU submeshes via jit) so tests
-can check output correctness, not just schedule quality.
+``schedule(..., execute=True)`` additionally runs the scheduled jobs for
+real (smoke-size models on CPU; the same code path drives TPU submeshes
+via jit) so tests can check output correctness, not just schedule quality.
+
+Since the ``repro.stream`` service landed, the engine is a *client* of the
+stream rather than a standalone code path: every device-resident method
+is scheduled via ``StreamingScheduler.schedule_prepared`` (the engine's
+TPU-roofline tables enter the admission queue as prepared scenarios and
+ride the same compiled row executables as every sweep), which is
+bit-identical to the old direct ``run_strategy`` call with the same seed
+and budget.  Host-only methods (heuristics, RL) keep the host loop.
 """
 from __future__ import annotations
 
@@ -31,7 +39,7 @@ import numpy as np
 from repro.core import M3E  # noqa: F401  (re-export convenience)
 from repro.core.fitness import FitnessFn
 from repro.core.job_analyzer import table_from_arrays
-from repro.core.magma import magma_search, SearchResult
+from repro.core.magma import SearchResult
 from repro.core.bw_allocator import simulate_numpy
 from repro.core.encoding import decode_to_lists
 from repro.costmodel.tpu import TPUSubmesh, V5E
@@ -115,7 +123,8 @@ class MultiTenantEngine:
                  submeshes: Optional[Sequence[Submesh]] = None,
                  system_bw: float = 64e9, group_size: int = 64,
                  decode_window: int = 32, budget: int = 2_000,
-                 method: str = "magma", seed: int = 0):
+                 method: str = "magma", seed: int = 0,
+                 stream=None):
         self.tenants = {t.name: t for t in tenants}
         self.submeshes = list(submeshes or default_submeshes())
         self.system_bw = float(system_bw)
@@ -125,6 +134,39 @@ class MultiTenantEngine:
         self.method = method
         self.seed = seed
         self._uid = 0
+        # the stream service this engine schedules through (shared so many
+        # engines can feed one admission queue); lazily built when the
+        # first device-resident method is scheduled
+        self._stream = stream
+        self._owns_stream = False
+
+    def stream_service(self):
+        """The ``repro.stream.StreamingScheduler`` this engine is a client
+        of (created on first use unless one was injected)."""
+        if self._stream is None:
+            from repro.stream import StreamConfig, StreamingScheduler
+            # no trace analysis happens on this path (scenarios arrive
+            # prepared), so a minimal analysis pool suffices
+            self._stream = StreamingScheduler(
+                budget=self.budget,
+                stream=StreamConfig(analysis_workers=1))
+            self._owns_stream = True
+        return self._stream
+
+    def close(self) -> None:
+        """Shut down the stream service this engine created (an injected,
+        shared service is the injector's to close)."""
+        if self._owns_stream and self._stream is not None:
+            self._stream.close()
+            self._stream = None
+            self._owns_stream = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # -- job construction -----------------------------------------------------
     def jobs_for_requests(self, requests: Sequence[Tuple[str, int, int]]
@@ -164,26 +206,53 @@ class MultiTenantEngine:
         return table_from_arrays(lat, bw, flops)
 
     def schedule(self, jobs: Sequence[ServeJob],
-                 method: Optional[str] = None) -> Dict:
+                 method: Optional[str] = None,
+                 execute: bool = False,
+                 prompts: Optional[Dict[int, np.ndarray]] = None) -> Dict:
+        """Profile, search, and map ``jobs`` onto the submeshes.
+
+        Device-resident methods go through the stream service (prepared
+        scenario -> admission queue -> compiled row executable), which is
+        bit-identical to a direct ``run_strategy`` with the same seed and
+        budget; host-only methods run their own loops.  With
+        ``execute=True`` the scheduled jobs also run for real in queue
+        order (``prompts`` maps prefill-job uid -> token array) and the
+        generated tokens come back under ``"outputs"``.
+        """
         from repro.core.strategies import get_strategy, run_strategy
+        if execute and prompts is None:
+            raise ValueError("execute=True needs prompts "
+                             "(prefill-job uid -> token array)")
         table = self.analyze(jobs)
         fit = FitnessFn(table, bw_sys=self.system_bw)
         method = method or self.method
-        res: SearchResult = run_strategy(get_strategy(method), fit,
-                                         budget=self.budget, seed=self.seed)
+        strategy = get_strategy(method)
+        stream_res = None
+        if strategy.device_resident:
+            stream_res = self.stream_service().schedule_prepared(
+                fit, seed=self.seed, budget=self.budget, strategy=strategy)
+            res = stream_res.to_search_result()
+        else:
+            res: SearchResult = run_strategy(strategy, fit,
+                                             budget=self.budget,
+                                             seed=self.seed)
         local = decode_to_lists(res.best_accel, res.best_prio,
                                 len(self.submeshes))
         makespan = simulate_numpy(local, table.lat, table.bw, self.system_bw)
         # map group-local job indices back to engine-global job uids
         queues = [[int(jobs[i].uid) for i in q] for q in local]
-        return {
+        out = {
             "result": res,
             "queues": queues,
             "local_queues": local,
             "makespan_s": float(makespan),
             "throughput_flops": table.total_flops / max(makespan, 1e-30),
             "table": table,
+            "stream": stream_res,
         }
+        if execute:
+            out["outputs"] = self.execute(jobs, queues, prompts)
+        return out
 
     # -- execution (functional correctness on the scheduled order) -------------
     def execute(self, jobs: Sequence[ServeJob], queues: List[List[int]],

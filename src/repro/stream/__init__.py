@@ -1,0 +1,26 @@
+"""repro.stream — streaming multi-tenant scheduling service.
+
+Turns the batch (analyze-then-sweep) workflow into a continuous pipeline:
+a deterministic arrival-trace generator (``workloads``), an async host
+analysis stage (``analysis``), an admission/batching stage dispatching
+ready scenarios through the sweep's compiled row executables
+(``service``), and a result router + service metrics (``metrics``).
+Every streamed schedule is bit-identical to a standalone
+``magma_search``/``run_sweep`` row — the pipeline only changes *when*
+schedules are computed, never *what* they are.
+"""
+from repro.stream.workloads import (ARRIVAL_KINDS, ScenarioRequest,
+                                    TraceConfig, generate_trace)
+from repro.stream.analysis import AnalysisPool, ReadyScenario, analyze_serial
+from repro.stream.metrics import (StreamMetrics, compute_metrics,
+                                  interval_union_s)
+from repro.stream.service import (PreparedScenario, StreamConfig,
+                                  StreamResult, StreamingScheduler)
+
+__all__ = [
+    "ARRIVAL_KINDS", "ScenarioRequest", "TraceConfig", "generate_trace",
+    "AnalysisPool", "ReadyScenario", "analyze_serial",
+    "StreamMetrics", "compute_metrics", "interval_union_s",
+    "PreparedScenario", "StreamConfig", "StreamResult",
+    "StreamingScheduler",
+]

@@ -1,0 +1,71 @@
+"""Stream metrics — the service-level numbers the pipeline is judged by.
+
+Batch sweeps report one wall time; a streaming service is judged like a
+server: per-scenario schedule latency (arrival -> schedule returned)
+p50/p99, sustained scenarios/sec, and how busy the pipeline keeps the
+device (device-idle fraction — the quantity the async analysis stage
+exists to shrink).  Device busy time is measured as the union of
+[dispatch, routed] intervals of all device batches: batches may overlap
+(up to ``max_inflight`` are enqueued at once and XLA executes them
+back-to-back), so summing walls would double-count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+def interval_union_s(intervals: Sequence[Tuple[float, float]]) -> float:
+    """Total length covered by a set of [start, end] intervals."""
+    total, last_end = 0.0, -np.inf
+    for start, end in sorted(intervals):
+        if end <= last_end:
+            continue
+        total += end - max(start, last_end)
+        last_end = end
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamMetrics:
+    num_scenarios: int
+    wall_s: float                   # first submit -> last result routed
+    scenarios_per_sec: float
+    latency_p50_s: float            # arrival -> schedule returned
+    latency_p99_s: float
+    latency_mean_s: float
+    analysis_busy_s: float          # union of analysis intervals
+    device_busy_s: float            # union of [dispatch, routed] intervals
+    device_idle_frac: float         # 1 - device_busy/wall
+    num_batches: int
+    mean_batch_fill: float          # real rows / padded rows, averaged
+
+    def summary(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def compute_metrics(results, batches, wall_s: float) -> StreamMetrics:
+    """Aggregate routed :class:`~repro.stream.service.StreamResult`s and
+    per-batch dispatch records into service metrics."""
+    lats = np.array([r.latency_s for r in results], dtype=np.float64)
+    dev = interval_union_s([(b.dispatch_s, b.done_s) for b in batches])
+    ana = interval_union_s(
+        [(r.analysis_start_s, r.ready_s) for r in results
+         if r.ready_s > r.analysis_start_s])
+    fills = [b.rows / max(b.padded_rows, 1) for b in batches]
+    wall = max(wall_s, 1e-12)
+    return StreamMetrics(
+        num_scenarios=len(results),
+        wall_s=wall_s,
+        scenarios_per_sec=len(results) / wall,
+        latency_p50_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
+        latency_p99_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+        latency_mean_s=float(lats.mean()) if len(lats) else 0.0,
+        analysis_busy_s=ana,
+        device_busy_s=dev,
+        device_idle_frac=max(0.0, 1.0 - dev / wall),
+        num_batches=len(batches),
+        mean_batch_fill=float(np.mean(fills)) if fills else 0.0,
+    )

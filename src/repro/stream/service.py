@@ -1,0 +1,519 @@
+"""Streaming scheduler service — the batch sweep as a continuous pipeline.
+
+Stages (each overlapping the others):
+
+  arrivals        ``ScenarioRequest``s from a trace (or prepared
+                  ``FitnessFn``s from a client like ``serve.engine``)
+  analysis        bounded host thread pool (``AnalysisPool``) producing
+                  Job Analysis Tables concurrently with device compute
+  admission       ready scenarios are grouped by *compatibility key*
+                  (same (G, A) tables, objective, kernel flag, budget —
+                  everything a compiled executable is specialized on),
+                  padded to a power-of-two bucket, and dispatched through
+                  the SAME compiled row executables ``run_sweep`` uses
+                  (``repro.core.sweep.row_executable``)
+  device          up to ``max_inflight`` batches enqueued at once — JAX
+                  dispatch is async, so batch i+1's transfer and launch
+                  overlap batch i's compute (the sweep's double-buffering,
+                  continuous)
+  router          results come off the device in dispatch order and are
+                  routed back to their requests with full timing stamps;
+                  ``compute_metrics`` turns them into service metrics
+
+Bit-identity guarantee
+----------------------
+A streamed scenario's schedule is **bit-identical** to a standalone
+``magma_search`` / ``run_sweep`` row with the same (scenario, seed): each
+row is seeded from ``PRNGKey(request.seed)`` and evaluated by the same
+vmapped per-row search the sweep runs, and rows are independent (padding
+repeats the last real row; its results are sliced off).  Batching,
+bucket padding, device count, and arrival order therefore change only
+*when* a schedule is computed, never *what* it is — the pipeline is a
+pure-throughput win (tests/test_stream.py gates this, in-process and on
+8 fake devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, wait
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.fitness import FitnessFn
+from repro.core.magma import MagmaConfig, SearchResult
+from repro.core.strategies import SearchStrategy, plan_generations
+from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
+from repro.stream.analysis import AnalysisPool, ReadyScenario
+from repro.stream.metrics import StreamMetrics, compute_metrics
+from repro.stream.workloads import ScenarioRequest, TraceConfig, generate_trace
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Pipeline shape knobs.
+
+    batch_rows        admission cap: at most this many scenarios per
+                      device dispatch (batches are padded up to a
+                      power-of-two bucket <= batch_rows, so only
+                      O(log batch_rows) executables exist per
+                      compatibility key)
+    analysis_workers  host threads running the Job Analyzer
+    max_inflight      device batches enqueued but not yet routed; 2 =
+                      classic double buffering (the next batch's transfer
+                      + launch overlap the current batch's compute)
+    max_devices       shard each batch over at most this many devices
+                      (None: all visible)
+    realtime          replay trace arrival times on the wall clock; False
+                      (default) replays as-fast-as-possible — arrival is
+                      the submission instant, the open-loop throughput
+                      benchmark mode
+    max_hold_s        liveness bound on partial-batch holding: a partial
+                      batch normally waits for in-flight analyses to fill
+                      it, but under sustained load of *other*
+                      compatibility keys those analyses never will — once
+                      the oldest held scenario has waited this long it
+                      dispatches bucket-padded regardless
+    """
+    batch_rows: int = 8
+    analysis_workers: int = 2
+    max_inflight: int = 2
+    max_devices: Optional[int] = None
+    realtime: bool = False
+    max_hold_s: float = 0.25
+
+    def __post_init__(self):
+        for field in ("batch_rows", "analysis_workers", "max_inflight"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1, got "
+                                 f"{getattr(self, field)}")
+        if self.max_devices is not None and self.max_devices < 1:
+            raise ValueError(f"max_devices must be >= 1 or None, got "
+                             f"{self.max_devices}")
+        if self.max_hold_s < 0:
+            raise ValueError(f"max_hold_s must be >= 0, got "
+                             f"{self.max_hold_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedScenario:
+    """A client-supplied, already-analyzed scenario (e.g. serve.engine's
+    TPU-submesh tables): skips the analysis stage, enters admission
+    directly."""
+    fit: FitnessFn
+    seed: int
+    uid: int = 0
+    budget: Optional[int] = None     # None: the service's default
+    strategy: Union[SearchStrategy, str, None] = None  # None: the service's
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One routed schedule + the request's trip through the pipeline
+    (timestamps are offsets from the run's start)."""
+    request: ScenarioRequest
+    best_fitness: float
+    best_accel: np.ndarray
+    best_prio: np.ndarray
+    history_best: np.ndarray
+    n_samples: int
+    arrival_s: float
+    analysis_start_s: float
+    ready_s: float
+    dispatch_s: float
+    done_s: float
+
+    @property
+    def latency_s(self) -> float:
+        """Schedule latency: arrival -> schedule routed back."""
+        return self.done_s - self.arrival_s
+
+    def to_search_result(self) -> SearchResult:
+        """The row as the ``SearchResult`` a standalone search returns."""
+        T = len(self.history_best)
+        per_gen = self.n_samples // max(T, 1)
+        return SearchResult(
+            best_fitness=self.best_fitness,
+            best_accel=self.best_accel, best_prio=self.best_prio,
+            history_samples=per_gen * np.arange(1, T + 1),
+            history_best=np.asarray(self.history_best, dtype=np.float64),
+            n_samples=self.n_samples,
+            wall_time_s=self.done_s - self.dispatch_s,
+        )
+
+
+@dataclasses.dataclass
+class _BatchRecord:
+    """Router-side record of one device dispatch (feeds the metrics)."""
+    dispatch_s: float
+    done_s: float
+    rows: int
+    padded_rows: int
+    num_devices: int
+    compat_key: Tuple
+
+
+@dataclasses.dataclass
+class _Inflight:
+    out: tuple                      # device arrays, possibly still computing
+    members: List[ReadyScenario]
+    dispatch_s: float
+    padded_rows: int
+    num_devices: int
+    compat_key: Tuple
+
+
+class StreamingScheduler:
+    """The streaming multi-tenant scheduling service.
+
+    One instance holds the analysis pool (and its shared profile caches)
+    and reuses compiled executables across runs, so a long-lived service
+    pays compilation once per (compatibility key, bucket) and then keeps
+    the device saturated.
+
+        svc = StreamingScheduler(budget=2_000)
+        results = svc.run(generate_trace(TraceConfig(num_scenarios=32)))
+        print(svc.last_metrics.summary())
+    """
+
+    def __init__(self,
+                 strategy: Union[SearchStrategy, str, None] = None,
+                 cfg: Optional[MagmaConfig] = None,
+                 budget: int = 2_000,
+                 stream: Optional[StreamConfig] = None):
+        self.stream = stream or StreamConfig()
+        self.budget = int(budget)
+        self._strategy = _resolve_strategy(strategy, cfg)
+        if not self._strategy.device_resident:
+            raise ValueError(
+                f"strategy {self._strategy.name!r} is host-only; the "
+                "streaming service batches scenarios onto the device fleet "
+                "and cannot run host-loop searches")
+        self._t0 = time.perf_counter()
+        self.pool = AnalysisPool(self.stream.analysis_workers,
+                                 clock=self._clock)
+        self.last_metrics: Optional[StreamMetrics] = None
+        self.last_batches: List[_BatchRecord] = []
+        # one run at a time: the clock zero, batch records, and metrics
+        # are per-run state, so concurrent clients (several engines
+        # sharing one service) serialize here rather than corrupt them
+        self._run_lock = threading.Lock()
+
+    # -- clock ----------------------------------------------------------------
+    def _clock(self) -> float:
+        return time.perf_counter() - self._t0
+
+    # -- admission helpers ----------------------------------------------------
+    def _resolve_override(self, strategy) -> SearchStrategy:
+        if strategy is None:
+            return self._strategy
+        strategy = _resolve_strategy(strategy, None)
+        if not strategy.device_resident:
+            raise ValueError(
+                f"strategy {strategy.name!r} is host-only and cannot be "
+                "streamed; run it per problem via run_strategy")
+        return strategy
+
+    def _compat_key(self, ready: ReadyScenario) -> Tuple:
+        """Everything a compiled row executable is specialized on: only
+        scenarios agreeing on all of it may share a device batch."""
+        fit = ready.fit
+        budget = ready.request.budget or self.budget
+        return (self._resolve_override(ready.strategy), fit.group_size,
+                fit.num_accels, fit.use_kernel, fit.objective, budget)
+
+    def _bucket(self, n: int) -> int:
+        b = 1
+        while b < n:
+            b *= 2
+        return min(b, self.stream.batch_rows)
+
+    def _dispatch(self, compat_key: Tuple, members: List[ReadyScenario]
+                  ) -> _Inflight:
+        base, G, A, use_kernel, objective, budget = compat_key
+        strategy = base.bind(A)
+        generations, evolve_last = plan_generations(budget,
+                                                    strategy.ask_size)
+        n = len(members)
+        bucket = self._bucket(n)
+        avail = len(jax.devices())
+        ndev = avail if self.stream.max_devices is None else max(1, min(
+            self.stream.max_devices, avail))
+        ndev = min(ndev, bucket)
+        padded = -(-bucket // ndev) * ndev           # dense shards
+
+        keys = np.stack([np.asarray(jax.random.PRNGKey(m.request.seed))
+                         for m in members])
+        params = jax.tree.map(
+            lambda *xs: np.stack([np.asarray(x) for x in xs]),
+            *[m.fit.params for m in members])
+        params, keys = _pad_rows(params, keys, padded)
+
+        fn, target = row_executable(strategy, generations, evolve_last, G,
+                                    use_kernel, objective, ndev)
+        keys_d = jax.device_put(keys, target)
+        params_d = jax.device_put(params, target)
+        out = fn(keys_d, params_d)      # async dispatch: returns immediately
+        return _Inflight(out=out, members=members, dispatch_s=self._clock(),
+                         padded_rows=padded, num_devices=ndev,
+                         compat_key=compat_key)
+
+    def _prepared_ready(self, p: PreparedScenario) -> ReadyScenario:
+        """A client-supplied scenario as an admission-queue entry (the
+        synthetic request carries the placeholder provenance fields)."""
+        now = self._clock()
+        req = ScenarioRequest(
+            uid=p.uid, arrival_s=now, mix="<prepared>",
+            setting="<prepared>", bw_gb=p.fit.bw_sys / 1024 ** 3,
+            group_size=p.fit.group_size, seed=p.seed,
+            objective=p.fit.objective, budget=p.budget)
+        return ReadyScenario(request=req, fit=p.fit, analysis_start_s=now,
+                             ready_s=now,
+                             strategy=self._resolve_override(p.strategy))
+
+    def _route(self, inf: _Inflight, results: List[StreamResult]) -> None:
+        jax.block_until_ready(inf.out)
+        done = self._clock()
+        bf, ba, bp, hist = (np.asarray(o) for o in inf.out)
+        base, _, A, _, _, budget = inf.compat_key
+        strategy = base.bind(A)
+        generations, _ = plan_generations(budget, strategy.ask_size)
+        n_samples = strategy.ask_size * generations
+        for i, m in enumerate(inf.members):
+            results.append(StreamResult(
+                request=m.request,
+                best_fitness=float(bf[i]),
+                best_accel=ba[i], best_prio=bp[i], history_best=hist[i],
+                n_samples=n_samples,
+                arrival_s=m.request.arrival_s,
+                analysis_start_s=m.analysis_start_s,
+                ready_s=m.ready_s,
+                dispatch_s=inf.dispatch_s,
+                done_s=done,
+            ))
+        self.last_batches.append(_BatchRecord(
+            dispatch_s=inf.dispatch_s, done_s=done, rows=len(inf.members),
+            padded_rows=inf.padded_rows, num_devices=inf.num_devices,
+            compat_key=inf.compat_key))
+
+    # -- the pipeline ---------------------------------------------------------
+    def run(self,
+            requests: Sequence[ScenarioRequest] = (),
+            prepared: Sequence[PreparedScenario] = ()
+            ) -> List[StreamResult]:
+        """Drive the full pipeline over a trace (plus any prepared
+        scenarios) and return results ordered by request uid.  Metrics for
+        the run land in ``self.last_metrics``.  One run executes at a
+        time (per-run clock/metrics state); concurrent callers serialize.
+        """
+        with self._run_lock:
+            return self._run(requests, prepared)
+
+    def _run(self, requests, prepared) -> List[StreamResult]:
+        self._t0 = time.perf_counter()
+        self.last_batches = []
+        realtime = self.stream.realtime
+
+        to_submit = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
+        queues: Dict[Tuple, deque] = {}
+        inflight: deque = deque()
+        futs = set()
+        results: List[StreamResult] = []
+
+        def admit(ready: ReadyScenario):
+            queues.setdefault(self._compat_key(ready), deque()).append(ready)
+
+        for p in prepared:
+            admit(self._prepared_ready(p))
+
+        while to_submit or futs or any(queues.values()) or inflight:
+            progressed = False
+
+            # 1. feed due arrivals into the analysis pool
+            while to_submit and (not realtime
+                                 or to_submit[0].arrival_s <= self._clock()):
+                req = to_submit.popleft()
+                if not realtime:
+                    # as-fast-as-possible replay: arrival == submission
+                    req = dataclasses.replace(req, arrival_s=self._clock())
+                futs.add(self.pool.submit(req))
+                progressed = True
+
+            # 2. drain finished analyses into the admission queues
+            if futs:
+                done, futs = wait(futs, timeout=0)
+                for f in done:
+                    admit(f.result())
+                    progressed = bool(done) or progressed
+
+            # 3. admission: FULL batches whenever a queue has them; while
+            # any analysis is in flight, partials are HELD — analyses
+            # complete in milliseconds and fill the batch, whereas a
+            # small row-batch wastes device efficiency (per-row cost
+            # rises sharply below batch_rows) and, on a shared-core host,
+            # steals CPU from the very analyses that would fill it.  With
+            # nothing being analyzed (stream draining, or sparse realtime
+            # arrivals), partials go out bucket-padded rather than letting
+            # the device idle — and a partial whose oldest member has
+            # waited max_hold_s dispatches regardless, so a rare
+            # compatibility key cannot starve behind a sustained stream
+            # of other keys.  Deepest queue first so batches fill out.
+            while len(inflight) < self.stream.max_inflight:
+                ready_qs = [(len(q), k) for k, q in queues.items() if q]
+                if not ready_qs:
+                    break
+                # key= so depth ties never compare the compat keys
+                # (strategies/None don't order)
+                depth, key = max(ready_qs, key=lambda x: x[0])
+                if depth < self.stream.batch_rows and futs:
+                    stale = [k for _, k in ready_qs
+                             if self._clock() - queues[k][0].ready_s
+                             > self.stream.max_hold_s]
+                    if not stale:
+                        break      # hold the partial: more is coming
+                    key = stale[0]
+                q = queues[key]
+                members = [q.popleft()
+                           for _ in range(min(len(q),
+                                              self.stream.batch_rows))]
+                inflight.append(self._dispatch(key, members))
+                progressed = True
+
+            # 4. route: block on the head batch when the pipeline is full
+            if inflight and len(inflight) >= self.stream.max_inflight:
+                self._route(inflight.popleft(), results)
+                progressed = True
+
+            if not progressed:
+                if inflight:
+                    # nothing else to do until the head batch finishes
+                    # (held partials dispatch right after it routes)
+                    self._route(inflight.popleft(), results)
+                elif futs:         # analyses still running: wait for one
+                    wait(futs, timeout=0.01, return_when=FIRST_COMPLETED)
+                elif realtime and to_submit:
+                    time.sleep(min(0.01, max(
+                        0.0, to_submit[0].arrival_s - self._clock())))
+
+        wall = self._clock()
+        results.sort(key=lambda r: r.request.uid)
+        self.last_metrics = compute_metrics(results, self.last_batches, wall)
+        return results
+
+    def run_trace(self, trace: TraceConfig) -> List[StreamResult]:
+        """Generate ``trace`` and run it through the pipeline."""
+        return self.run(generate_trace(trace))
+
+    def warmup(self, requests: Sequence[ScenarioRequest] = (),
+               prepared: Sequence[PreparedScenario] = ()
+               ) -> "StreamingScheduler":
+        """Pre-compile every bucket-size executable the given workload can
+        hit (and pre-fill the analyzer profile caches).
+
+        Greedy admission makes batch sizes timing-dependent — whichever
+        scenarios are ready go out — so without warmup a cold bucket's
+        XLA compile can land mid-stream and stall the pipeline for
+        seconds.  A production service compiles at startup; call this
+        with a representative trace before serving (the perf benchmark
+        does, so it measures the pipeline, not compilation).
+        """
+        from repro.costmodel import get_setting
+        with self._run_lock:
+            # one representative per executable-relevant signature
+            # (derivable without analysis), so warming a big trace costs
+            # a few analyses
+            reps: Dict[Tuple, ScenarioRequest] = {}
+            for req in requests:
+                sig = (req.group_size,
+                       get_setting(req.setting).num_sub_accels,
+                       req.objective, req.budget or self.budget)
+                reps.setdefault(sig, req)
+            seen: Dict[Tuple, ReadyScenario] = {}
+            for req in reps.values():
+                r = self.pool.analyze(req)
+                seen.setdefault(self._compat_key(r), r)
+            for p in prepared:
+                r = self._prepared_ready(p)
+                seen.setdefault(self._compat_key(r), r)
+            for key, ready in seen.items():
+                bucket = 1
+                while True:
+                    members = [ready] * min(bucket, self.stream.batch_rows)
+                    jax.block_until_ready(self._dispatch(key, members).out)
+                    if bucket >= self.stream.batch_rows:
+                        break
+                    bucket *= 2
+            self.pool.prestart()         # worker threads spawn lazily
+            self.last_batches = []       # warmup dispatches are not metrics
+            return self
+
+    def run_serial(self, requests: Sequence[ScenarioRequest],
+                   shared_cache: bool = False) -> List[StreamResult]:
+        """The pre-stream workflow as a baseline: analyze EVERY scenario
+        first (host, one at a time), then sweep the batches (device), with
+        no overlap anywhere.  ``shared_cache=False`` (default) replicates
+        the old ``M3E.prepare`` exactly — a fresh ``JobAnalyzer`` per
+        scenario, no cross-scenario profile reuse; ``shared_cache=True``
+        grants the baseline the stream's shared digest cache, isolating
+        the *pipelining* contribution from the *cache* contribution.
+        Same admission grouping, same compiled executables, bit-identical
+        results either way.  Metrics land in ``self.last_metrics``."""
+        with self._run_lock:
+            return self._run_serial(requests, shared_cache)
+
+    def _run_serial(self, requests, shared_cache) -> List[StreamResult]:
+        self._t0 = time.perf_counter()
+        self.last_batches = []
+        results: List[StreamResult] = []
+
+        # every request is on hand when the batch starts (the same
+        # as-fast-as-possible convention the pipelined run uses), so all
+        # arrivals stamp at t~0 — a scenario analyzed late has been
+        # *waiting*, and its schedule latency must say so
+        now = self._clock()
+        ready: List[ReadyScenario] = [
+            self.pool.analyze(dataclasses.replace(req, arrival_s=now),
+                              fresh_analyzer=not shared_cache)
+            for req in sorted(requests, key=lambda r: (r.arrival_s, r.uid))]
+
+        queues: Dict[Tuple, deque] = {}
+        for r in ready:
+            queues.setdefault(self._compat_key(r), deque()).append(r)
+        for key, q in queues.items():
+            while q:
+                members = [q.popleft()
+                           for _ in range(min(len(q),
+                                              self.stream.batch_rows))]
+                # dispatch-then-route immediately: the device never has a
+                # second batch enqueued behind the current one
+                self._route(self._dispatch(key, members), results)
+
+        wall = self._clock()
+        results.sort(key=lambda r: r.request.uid)
+        self.last_metrics = compute_metrics(results, self.last_batches, wall)
+        return results
+
+    def schedule_prepared(self, fit: FitnessFn, seed: int = 0,
+                          budget: Optional[int] = None,
+                          strategy: Union[SearchStrategy, str, None] = None
+                          ) -> StreamResult:
+        """Schedule ONE prepared scenario through the stream (the
+        ``serve.engine`` client path).  Bit-identical to a standalone
+        ``run_strategy``/``magma_search`` with the same seed, budget and
+        (device-resident) strategy."""
+        return self.run(prepared=[PreparedScenario(
+            fit=fit, seed=seed, budget=budget, strategy=strategy)])[0]
+
+    def close(self) -> None:
+        self.pool.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -146,6 +146,70 @@ def bert_base() -> List[LayerDesc]:
 
 
 # --------------------------------------------------------------------------
+# Streaming heavy/light mixes (HERALD / MAGMA multi-DNN serving workloads:
+# AlphaGoZero, DeepSpeech2, FasterRCNN, Transformer join NCF + ResNet50)
+# --------------------------------------------------------------------------
+def alphagozero() -> List[LayerDesc]:
+    """20-block residual tower: 256-channel 3x3 convs on the 19x19 board.
+    Compute-heavy, tiny activations — the canonical 'heavy' job source."""
+    N = VISION_N
+    ls: List[LayerDesc] = [conv2d("stem", N, 256, 17, 19, 19, 3, 3)]
+    for i in range(20):
+        ls += [conv2d(f"b{i}.c1", N, 256, 256, 19, 19, 3, 3),
+               conv2d(f"b{i}.c2", N, 256, 256, 19, 19, 3, 3)]
+    ls += [conv2d("policy_conv", N, 2, 256, 19, 19, 1, 1),
+           fc("policy_fc", N, 362, 2 * 19 * 19),
+           conv2d("value_conv", N, 1, 256, 19, 19, 1, 1),
+           fc("value_fc1", N, 256, 19 * 19), fc("value_fc2", N, 1, 256)]
+    return ls
+
+
+def deepspeech2() -> List[LayerDesc]:
+    """2D conv frontend + bidirectional GRU stack (GRUs as FC bags over the
+    time axis, Section II-A style) + CTC head.  BW-hungry, light compute."""
+    T = LANG_SEQ                       # spectrogram frames after striding
+    ls: List[LayerDesc] = [
+        conv2d("conv1", 1, 32, 1, T, 41, 11, 41, 2),
+        conv2d("conv2", 1, 32, 32, T, 21, 11, 21, 1),
+    ]
+    d_in, d_h = 32 * 21, 800
+    for i in range(5):
+        # one bidirectional GRU layer = 2 directions x (input + recurrent)
+        # gate GEMMs, each producing 3 gates of width d_h
+        for dr in ("fw", "bw"):
+            ls += [fc(f"gru{i}.{dr}.x", T, 3 * d_h, d_in if i == 0 else 2 * d_h),
+                   fc(f"gru{i}.{dr}.h", T, 3 * d_h, d_h)]
+    ls.append(fc("ctc_head", T, 29, 2 * d_h))
+    return ls
+
+
+def fasterrcnn() -> List[LayerDesc]:
+    """ResNet50 backbone + RPN + RoI detection head (paper's FasterRCNN)."""
+    N = VISION_N
+    ls = resnet50()[:-1]               # backbone sans the classifier head
+    ls += [conv2d("rpn.conv", N, 512, 2048, 14, 14, 3, 3),
+           conv2d("rpn.cls", N, 18, 512, 14, 14, 1, 1),
+           conv2d("rpn.box", N, 36, 512, 14, 14, 1, 1),
+           # RoI head over 128 proposals of 7x7x256 pooled features
+           fc("roi.fc1", 128, 1024, 7 * 7 * 256),
+           fc("roi.fc2", 128, 1024, 1024),
+           fc("roi.cls", 128, 91, 1024), fc("roi.box", 128, 364, 1024)]
+    return ls
+
+
+def transformer() -> List[LayerDesc]:
+    """Transformer-base (6 encoder + 6 decoder layers, d=512, h=8)."""
+    ls: List[LayerDesc] = []
+    for i in range(6):
+        ls += attention_fcs(f"enc{i}", LANG_SEQ, 512, 8, d_ff=2048)
+    for i in range(6):
+        # decoder: self-attention + cross-attention + FFN (two FC bags)
+        ls += attention_fcs(f"dec{i}.self", LANG_SEQ, 512, 8, d_ff=2048)
+        ls += attention_fcs(f"dec{i}.cross", LANG_SEQ, 512, 8)
+    return ls
+
+
+# --------------------------------------------------------------------------
 # Recommendation (MLPs over large batches; embeddings stay on host)
 # --------------------------------------------------------------------------
 def dlrm() -> List[LayerDesc]:
@@ -185,6 +249,9 @@ MODEL_ZOO = {
     # language
     "gpt2": gpt2, "mobilebert": mobilebert, "transformerxl": transformerxl,
     "bert_base": bert_base,
+    # streaming heavy/light workloads
+    "alphagozero": alphagozero, "deepspeech2": deepspeech2,
+    "fasterrcnn": fasterrcnn, "transformer": transformer,
     # recommendation
     "dlrm": dlrm, "widedeep": widedeep, "ncf": ncf, "din": din,
 }
@@ -196,6 +263,12 @@ TASK_MODELS = {
     "Mix": ["resnet50", "mobilenetv2", "shufflenet",
             "gpt2", "mobilebert", "transformerxl",
             "dlrm", "widedeep", "ncf"],
+    # streaming arrival mixes (repro.stream): the HERALD/MAGMA serving
+    # lineup split into compute-heavy and BW-light job sources
+    "Heavy": ["alphagozero", "fasterrcnn", "resnet50"],
+    "Light": ["deepspeech2", "ncf", "transformer"],
+    "HeavyLight": ["alphagozero", "fasterrcnn", "resnet50",
+                   "deepspeech2", "ncf", "transformer"],
 }
 
 

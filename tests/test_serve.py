@@ -66,6 +66,56 @@ def test_bigger_submesh_is_faster_per_job():
     assert big[1] > small[1]          # but more BW-hungry
 
 
+def test_schedule_execute_under_registry_strategies(engine):
+    """schedule(execute=True) under registry strategies (device-resident
+    AND host-only): every method's schedule covers all jobs, executed
+    outputs cover the scheduled decode queue, and the greedy tokens are
+    schedule-invariant (queue order only changes inter-chain
+    interleaving, never per-chain results).  Device-resident methods
+    route through the stream service and must match the direct
+    run_strategy result bit-for-bit."""
+    from repro.core.fitness import FitnessFn
+    from repro.core.strategies import get_strategy, run_strategy
+
+    reqs = [("granite-3-2b", 12, 4), ("falcon-mamba-7b", 16, 4)]
+    jobs = engine.jobs_for_requests(reqs)
+    rng = np.random.default_rng(1)
+    prompts = {j.uid: rng.integers(0, 128, (1, j.seq))
+               for j in jobs if j.phase == "prefill"}
+    decode_uids = sorted(j.uid for j in jobs if j.phase == "decode")
+
+    with pytest.raises(ValueError, match="prompts"):
+        engine.schedule(jobs, execute=True)
+
+    fit = FitnessFn(engine.analyze(jobs), bw_sys=engine.system_bw)
+    ref_tokens = None
+    for method in ("magma", "stdga", "random", "herald_like"):
+        out = engine.schedule(jobs, method=method, execute=True,
+                              prompts=prompts)
+        scheduled = sorted(uid for q in out["queues"] for uid in q)
+        assert scheduled == sorted(j.uid for j in jobs)
+        assert sorted(out["outputs"]) == decode_uids
+        toks = np.concatenate([out["outputs"][u] for u in decode_uids],
+                              axis=1)
+        if ref_tokens is None:
+            ref_tokens = toks
+        else:
+            np.testing.assert_array_equal(toks, ref_tokens)
+
+        strategy = get_strategy(method)
+        if strategy.device_resident:
+            assert out["stream"] is not None
+            ref = run_strategy(strategy, fit, budget=engine.budget,
+                               seed=engine.seed)
+            assert out["result"].best_fitness == ref.best_fitness
+            np.testing.assert_array_equal(out["result"].best_accel,
+                                          ref.best_accel)
+            np.testing.assert_array_equal(out["result"].best_prio,
+                                          ref.best_prio)
+        else:
+            assert out["stream"] is None
+
+
 def test_execute_runs_schedule_and_matches_reference(engine):
     """Scheduled execution produces the same tokens as a plain decode."""
     reqs = [("granite-3-2b", 12, 6)]

@@ -1,0 +1,310 @@
+"""Streaming scheduler service: the pipeline may reorder, batch, pad, and
+overlap work arbitrarily, but every streamed scenario's schedule must stay
+bit-identical to a standalone ``run_sweep`` row / ``magma_search`` with the
+same (scenario, seed) — the same guarantee the sweep already carries, so
+the pipeline is a pure-throughput win.  Multi-device coverage spawns a
+subprocess with 8 fake devices (CI also runs this file in the
+``multidevice`` job)."""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.job_analyzer import JobAnalyzer, profile_key
+from repro.core.magma import magma_search
+from repro.core.strategies import get_strategy, run_strategy
+from repro.core.sweep import run_sweep
+from repro.costmodel import get_setting
+from repro.stream import (AnalysisPool, PreparedScenario, ScenarioRequest,
+                          StreamConfig, StreamingScheduler, TraceConfig,
+                          analyze_serial, generate_trace, interval_union_s)
+from repro.workloads import build_task_groups
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BUDGET = 300
+QUICK = dict(group_size=12, bw_ladder_gb=(1.0, 16.0), settings=("S1", "S2"),
+             mixes=("Heavy", "Light"))
+
+
+# ---------------------------------------------------------------------------
+# workload/trace generator
+# ---------------------------------------------------------------------------
+def test_trace_deterministic_and_sorted():
+    cfg = TraceConfig(num_scenarios=16, seed=5, **QUICK)
+    t1, t2 = generate_trace(cfg), generate_trace(cfg)
+    assert t1 == t2
+    arr = [r.arrival_s for r in t1]
+    assert arr == sorted(arr) and len(t1) == 16
+    assert {r.mix for r in t1} <= {"Heavy", "Light"}
+    assert all(r.group_size == 12 for r in t1)
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty", "batch"])
+def test_arrival_processes(arrival):
+    cfg = TraceConfig(num_scenarios=24, arrival=arrival, rate_hz=16.0,
+                      seed=1, **QUICK)
+    trace = generate_trace(cfg)
+    times = np.array([r.arrival_s for r in trace])
+    if arrival == "batch":
+        assert (times == 0).all()
+    else:
+        assert times[-1] > 0
+    if arrival == "bursty":
+        # bursts share arrival instants: fewer distinct times than requests
+        assert len(np.unique(times)) < len(times)
+
+
+def test_trace_rejects_bad_config():
+    with pytest.raises(ValueError, match="arrival"):
+        TraceConfig(arrival="lumpy")
+    with pytest.raises(ValueError, match="mix"):
+        generate_trace(TraceConfig(mixes=("NoSuchMix",)))
+
+
+def test_streaming_mixes_exist():
+    for mix in ("Heavy", "Light", "HeavyLight"):
+        group = build_task_groups(mix, group_size=8, seed=0)[0]
+        assert len(group) == 8
+        assert all(j.flops > 0 for j in group.jobs)
+
+
+# ---------------------------------------------------------------------------
+# analyzer cache digest + thread-safety (async-analysis prerequisite)
+# ---------------------------------------------------------------------------
+def test_profile_key_ignores_names():
+    from repro.costmodel.layers import conv2d
+    from repro.workloads.benchmark import Job
+
+    accel = get_setting("S1")
+    sub0, sub1 = accel.sub_accels[0], accel.sub_accels[1]
+    l1 = conv2d("block0.conv", 4, 8, 8, 14, 14, 3, 3)
+    l2 = conv2d("block7.conv", 4, 8, 8, 14, 14, 3, 3)   # same dims, new name
+    # neither the layer's nor the sub-accelerator's name is cost-relevant
+    assert profile_key(l1, sub0) == profile_key(l2, sub0)
+    assert profile_key(l1, sub0) == profile_key(l1, sub1)  # S1 subs identical
+    l3 = conv2d("other", 4, 8, 8, 14, 14, 3, 3, stride=2)
+    assert profile_key(l1, sub0) != profile_key(l3, sub0)
+
+    an = JobAnalyzer(accel)
+    an.analyze([Job(0, "m", l1), Job(1, "m", l2), Job(2, "m", l3)])
+    # 2 distinct (layer, sub) digests across 3 jobs x 4 identical subs
+    assert an.cache_size == 2
+
+
+def test_job_analyzer_thread_safe_shared_cache():
+    accel = get_setting("S2")
+    jobs = build_task_groups("Heavy", group_size=16, seed=0)[0].jobs
+    shared = JobAnalyzer(accel)
+    ref = JobAnalyzer(accel).analyze(jobs)
+    tables, errors = [None] * 8, []
+
+    def work(i):
+        try:
+            tables[i] = shared.analyze(jobs)
+        except Exception as e:          # pragma: no cover - failure path
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    for tab in tables:
+        np.testing.assert_array_equal(tab.lat, ref.lat)
+        np.testing.assert_array_equal(tab.bw, ref.bw)
+        np.testing.assert_array_equal(tab.energy, ref.energy)
+
+
+def test_analysis_pool_matches_serial():
+    trace = generate_trace(TraceConfig(num_scenarios=6, seed=2, **QUICK))
+    with AnalysisPool(workers=3) as pool:
+        ready = [f.result() for f in [pool.submit(r) for r in trace]]
+    serial = analyze_serial(trace)
+    for a, b in zip(sorted(ready, key=lambda r: r.request.uid), serial):
+        assert a.request == b.request
+        np.testing.assert_array_equal(np.asarray(a.fit.params.lat),
+                                      np.asarray(b.fit.params.lat))
+        np.testing.assert_array_equal(np.asarray(a.fit.params.bw),
+                                      np.asarray(b.fit.params.bw))
+
+
+# ---------------------------------------------------------------------------
+# the pipeline: bit-identity + metrics
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def streamed():
+    trace = generate_trace(TraceConfig(num_scenarios=8, seed=3, **QUICK))
+    svc = StreamingScheduler(
+        budget=BUDGET, stream=StreamConfig(batch_rows=4, analysis_workers=2))
+    results = svc.run(trace)
+    return trace, svc, results
+
+
+def test_stream_results_cover_trace(streamed):
+    trace, _, results = streamed
+    assert [r.request.uid for r in results] == [t.uid for t in trace]
+    for r in results:
+        assert np.isfinite(r.best_fitness)
+        assert r.ready_s >= r.analysis_start_s
+        assert r.done_s >= r.dispatch_s >= 0
+        assert r.latency_s > 0
+
+
+def test_streamed_rows_bit_identical_to_run_sweep(streamed):
+    """THE guarantee: every streamed schedule == a standalone run_sweep
+    row (and, for MAGMA, == magma_search) with that (scenario, seed)."""
+    _, _, results = streamed
+    for r in results:
+        fit = analyze_serial([r.request])[0].fit
+        ref = run_sweep([fit], budget=BUDGET, seeds=[r.request.seed])
+        assert r.best_fitness == ref.best_fitness[0, 0]
+        np.testing.assert_array_equal(r.best_accel, ref.best_accel[0, 0])
+        np.testing.assert_array_equal(r.best_prio, ref.best_prio[0, 0])
+        np.testing.assert_array_equal(r.history_best,
+                                      ref.history_best[0, 0])
+        standalone = magma_search(fit, budget=BUDGET, seed=r.request.seed)
+        assert r.best_fitness == standalone.best_fitness
+
+
+def test_stream_metrics_sane(streamed):
+    _, svc, results = streamed
+    m = svc.last_metrics
+    assert m.num_scenarios == len(results)
+    assert 0 < m.latency_p50_s <= m.latency_p99_s
+    assert 0.0 <= m.device_idle_frac <= 1.0
+    assert m.device_busy_s <= m.wall_s + 1e-9
+    assert m.num_batches >= 2          # batch_rows=4 < 8 scenarios
+    assert 0 < m.mean_batch_fill <= 1.0
+    s = m.summary()
+    assert s["scenarios_per_sec"] > 0
+
+
+def test_interval_union():
+    assert interval_union_s([(0, 1), (0.5, 2), (3, 4)]) == pytest.approx(3.0)
+    assert interval_union_s([]) == 0.0
+    assert interval_union_s([(1, 2), (1, 2)]) == pytest.approx(1.0)
+
+
+def test_incompatible_scenarios_batch_separately():
+    """Scenarios whose tables differ in shape (group size) cannot share a
+    compiled executable; the admission stage must route them to separate
+    batches yet complete them all — and each still matches standalone.
+    (Different *settings* with the same (G, A) may legitimately share a
+    batch: the tables are traced row data, not compile-time constants.)"""
+    reqs = [ScenarioRequest(uid=0, arrival_s=0.0, mix="Light", setting="S1",
+                            bw_gb=4.0, group_size=8, seed=1),
+            ScenarioRequest(uid=1, arrival_s=0.0, mix="Light", setting="S2",
+                            bw_gb=4.0, group_size=8, seed=2),
+            ScenarioRequest(uid=2, arrival_s=0.0, mix="Light", setting="S1",
+                            bw_gb=4.0, group_size=10, seed=3)]
+    svc = StreamingScheduler(budget=BUDGET,
+                             stream=StreamConfig(batch_rows=4))
+    results = svc.run(reqs)
+    assert len(results) == 3
+    keys = {b.compat_key for b in svc.last_batches}
+    assert len(keys) == 2              # split on G=8 vs G=10, not on setting
+    for r in results:
+        fit = analyze_serial([r.request])[0].fit
+        ref = run_sweep([fit], budget=BUDGET, seeds=[r.request.seed])
+        assert r.best_fitness == ref.best_fitness[0, 0]
+
+
+def test_prepared_scenarios_and_strategy_override():
+    """Prepared scenarios skip analysis; per-scenario strategy overrides
+    batch separately and match the standalone strategy run."""
+    fit = analyze_serial(generate_trace(
+        TraceConfig(num_scenarios=1, seed=4, **QUICK)))[0].fit
+    svc = StreamingScheduler(budget=BUDGET)
+    for name in ("magma", "stdga"):
+        res = svc.schedule_prepared(fit, seed=7, strategy=name)
+        ref = run_strategy(get_strategy(name), fit, budget=BUDGET, seed=7)
+        assert res.best_fitness == ref.best_fitness
+        np.testing.assert_array_equal(res.best_accel, ref.best_accel)
+        sr = res.to_search_result()
+        np.testing.assert_array_equal(sr.history_samples,
+                                      ref.history_samples)
+        np.testing.assert_array_equal(sr.history_best, ref.history_best)
+
+
+def test_host_only_strategy_rejected():
+    with pytest.raises(ValueError, match="host-only"):
+        StreamingScheduler(strategy="herald_like")
+    fit = analyze_serial(generate_trace(
+        TraceConfig(num_scenarios=1, seed=0, **QUICK)))[0].fit
+    svc = StreamingScheduler(budget=BUDGET)
+    with pytest.raises(ValueError, match="host-only"):
+        svc.schedule_prepared(fit, strategy="cmaes")
+
+
+def test_realtime_replay_orders_arrivals():
+    """Realtime mode honors arrival offsets (scaled tiny for test speed)."""
+    trace = generate_trace(TraceConfig(num_scenarios=4, rate_hz=200.0,
+                                       seed=6, **QUICK))
+    svc = StreamingScheduler(
+        budget=BUDGET,
+        stream=StreamConfig(batch_rows=2, realtime=True))
+    results = svc.run(trace)
+    assert len(results) == 4
+    for r, t in zip(results, trace):
+        assert r.arrival_s == t.arrival_s       # trace offsets preserved
+        assert r.done_s >= t.arrival_s
+
+
+# ---------------------------------------------------------------------------
+# multi-device: subprocess with fake devices
+# ---------------------------------------------------------------------------
+def _run_sub(code: str, devices: int = 8) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_streamed_bit_identical_multidevice():
+    """8 fake devices: streamed schedules (sharded batches) == forced
+    single-device stream == standalone run_sweep rows."""
+    out = _run_sub("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.core.sweep import SweepConfig, run_sweep
+        from repro.stream import (StreamConfig, StreamingScheduler,
+                                  TraceConfig, analyze_serial,
+                                  generate_trace)
+
+        trace = generate_trace(TraceConfig(
+            num_scenarios=6, seed=3, group_size=12,
+            bw_ladder_gb=(1.0, 16.0), settings=("S2",), mixes=("Light",)))
+        svc = StreamingScheduler(budget=300, stream=StreamConfig(
+            batch_rows=4, analysis_workers=2))
+        res = svc.run(trace)
+        assert any(b.num_devices > 1 for b in svc.last_batches), \\
+            [b.num_devices for b in svc.last_batches]
+
+        one = StreamingScheduler(budget=300, stream=StreamConfig(
+            batch_rows=4, analysis_workers=2, max_devices=1))
+        res1 = one.run(trace)
+        for a, b in zip(res, res1):
+            assert a.best_fitness == b.best_fitness
+            np.testing.assert_array_equal(a.best_accel, b.best_accel)
+            np.testing.assert_array_equal(a.history_best, b.history_best)
+
+        for r in res:
+            fit = analyze_serial([r.request])[0].fit
+            ref = run_sweep([fit], budget=300, seeds=[r.request.seed],
+                            sweep=SweepConfig(max_devices=1))
+            assert r.best_fitness == ref.best_fitness[0, 0]
+            np.testing.assert_array_equal(r.best_accel,
+                                          ref.best_accel[0, 0])
+        print('STREAM-SHARDED-OK')
+    """)
+    assert "STREAM-SHARDED-OK" in out
