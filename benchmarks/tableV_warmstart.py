@@ -3,6 +3,12 @@ Rows: Raw (random individual), Trf-0-ep (transferred, no optimization),
 Trf-1-ep, Trf-30-ep, Trf-100-ep (full).  Validation: Trf-0-ep > Raw and
 Trf-0/1-ep recover most of the full run immediately.
 
+The warm-start engine rides the ``repro.memo`` subsystem now: remembered
+populations are content-addressed records in a ``repro.memo.MemoStore``
+(the task-type string is the records' transfer family).  The full
+generalization — nearest-fingerprint transfer plus exact-hit replay —
+is measured by ``benchmarks/perf_memo.py``.
+
 Note on magnitude: the paper reports Raw at 0.02-0.09 of full (so 7.4-152x
 gains).  Our BW allocator is *work-conserving* (idle bandwidth is always
 re-allocated proportionally, Algorithm 1 taken literally), which strongly
@@ -11,6 +17,9 @@ is throttled toward total_bytes/BW_sys.  The transfer structure (the
 paper's actual claim) reproduces: Trf-0-ep jumps most of the way to the
 full-search level with zero optimization on the new group."""
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
@@ -55,9 +64,12 @@ def run(pop=100, group_size=100, n_insts=4, epochs=(0, 1, 30, 100)):
                 finals[e].append(res.best_fitness)
     full = np.array(finals[max(epochs)])
     print("Raw," + ",".join(f"{v / f:.3f}" for v, f in zip(raws, full)))
+    rows["raw_frac"] = [float(v / f) for v, f in zip(raws, full)]
     for e in epochs:
         print(f"Trf-{e}-ep," + ",".join(
             f"{v / f:.3f}" for v, f in zip(finals[e], full)))
+        rows[f"trf_{e}_ep_frac"] = [float(v / f)
+                                    for v, f in zip(finals[e], full)]
     gain0 = float(np.mean(np.array(finals[0]) / np.array(raws)))
     full_frac = float(np.mean(np.array(finals[0]) / full))
     print(f"Trf-0-ep vs Raw: {gain0:.2f}x; Trf-0-ep reaches "
@@ -70,9 +82,26 @@ def run(pop=100, group_size=100, n_insts=4, epochs=(0, 1, 30, 100)):
 
 
 def main():
-    args = std_parser(__doc__).parse_args()
+    ap = std_parser(__doc__)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the table machine-readable (same "
+                         "convention as the other benchmarks)")
+    args = ap.parse_args()
     epochs = (0, 1, 30, 100) if args.full else (0, 1, 10, 20)
-    run(group_size=args.group_size, epochs=epochs)
+    rows = run(group_size=args.group_size, epochs=epochs)
+    if args.json:
+        report = {
+            "bench": "tableV_warmstart",
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "group_size": args.group_size,
+            "epochs": list(epochs),
+            "unix_time": time.time(),
+            **rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -36,12 +36,22 @@ _RUN_KWARGS = ("init_population", "keep_population", "engine")
 
 @dataclasses.dataclass
 class M3E:
-    """One optimization problem: (job group, accelerator, system BW)."""
+    """One optimization problem: (job group, accelerator, system BW).
+
+    ``warm_start`` is the legacy Section V-C cache (population transfer
+    keyed per task type); ``memo`` is the full ``repro.memo`` subsystem —
+    exact hits replay the stored schedule bit-for-bit with no search,
+    misses are warm-seeded from the nearest stored scenario of the same
+    task family, and every solved search is recorded back.  The two are
+    independent knobs (``memo`` subsumes ``warm_start`` when both are
+    set: the memo is consulted first).
+    """
     accel: AcceleratorConfig
     bw_sys: float                       # bytes/s
     objective: str = "throughput"
     use_kernel: bool = False
     warm_start: Optional[WarmStartEngine] = None
+    memo: Optional[object] = None       # repro.memo.ScheduleMemo
 
     def prepare(self, group: JobGroup) -> FitnessFn:
         table = JobAnalyzer(self.accel).analyze(group.jobs)
@@ -53,6 +63,14 @@ class M3E:
         fit = self.prepare(group)
         run_kw = {k: kw.pop(k) for k in _RUN_KWARGS if k in kw}
         strategy = get_strategy(method, **kw)
+        if self.memo is not None and strategy.device_resident \
+                and "init_population" not in run_kw:
+            # a caller-supplied init_population bypasses the memo
+            # entirely: replaying a cold record would discard the seed,
+            # and recording the seeded result under the cold fingerprint
+            # would poison exact-hit bit-identity for every other client
+            return self._search_memoized(group, strategy, fit, budget, seed,
+                                         run_kw)
         if strategy.name == "magma" and self.warm_start is not None:
             init = self.warm_start.init_population(
                 group.task, jax.random.PRNGKey(seed + 1),
@@ -66,6 +84,24 @@ class M3E:
                 self.warm_start.remember(group.task, res.final_population)
             return res
         return run_strategy(strategy, fit, budget=budget, seed=seed, **run_kw)
+
+    def _search_memoized(self, group: JobGroup, strategy, fit: FitnessFn,
+                         budget: int, seed: int, run_kw) -> SearchResult:
+        """Route one search through the schedule memo: exact hit ->
+        bit-identical replay (no search dispatched); miss -> warm-seed
+        from the nearest same-family scenario, run, record."""
+        hit = self.memo.lookup(fit, strategy, budget, seed)
+        if hit is not None:
+            return hit.to_search_result()
+        warm = self.memo.warm_start(fit, strategy, family=group.task)
+        if warm is not None:
+            run_kw["init_population"] = warm
+        run_kw.setdefault("keep_population", True)
+        res = run_strategy(strategy, fit, budget=budget, seed=seed, **run_kw)
+        self.memo.record(fit, strategy, budget, seed, res,
+                         population=res.final_population,
+                         family=group.task, warm=warm)
+        return res
 
     def describe_mapping(self, res: SearchResult) -> list:
         return decode_to_lists(res.best_accel, res.best_prio,

@@ -14,7 +14,7 @@ their own loops behind the same ``SearchResult`` contract.
     res = run_strategy(get_strategy("de"), fitness_fn, budget=10_000, seed=0)
 """
 from repro.core.strategies.base import (HostSearchStrategy, SearchStrategy,
-                                        decode_continuous)
+                                        WarmStart, decode_continuous)
 from repro.core.strategies.registry import (StrategyInfo, available,
                                             canonical_name, get_strategy,
                                             register, strategy_info)
@@ -26,7 +26,7 @@ from repro.core.strategies.blackbox import (DEStrategy, PSOStrategy,
 from repro.core.strategies import host as _host  # registers host-only methods
 
 __all__ = [
-    "SearchStrategy", "HostSearchStrategy", "decode_continuous",
+    "SearchStrategy", "HostSearchStrategy", "WarmStart", "decode_continuous",
     "StrategyInfo", "available", "canonical_name", "get_strategy",
     "register", "strategy_info",
     "plan_generations", "run_strategy", "scan_strategy",

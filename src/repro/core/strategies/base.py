@@ -32,9 +32,49 @@ change the trace).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+
+
+class WarmStart(NamedTuple):
+    """A transferred population as a traced warm-start seed.
+
+    Strategies that support population hand-off (``supports_init_population``)
+    accept this wherever ``init_population`` is taken.  Unlike a plain
+    ``Population`` (used verbatim), a ``WarmStart`` is *seeded*: ``init``
+    re-randomizes the priorities' low bits device-side — the diversity
+    jitter the warm-start transfer needs (Section V-C) — drawn from the
+    same sub-key that would have drawn a random population, so the whole
+    seeding stays inside the compiled scan and a warm-started search
+    differs from a cold one ONLY in its initial population.
+
+    All leaves are arrays (a pytree), so warm starts trace through
+    jit/vmap/shard_map: ``repro.core.sweep`` batches per-row warm starts
+    exactly like per-row scenario tables.
+    """
+    accel: jnp.ndarray    # (P, G) int32 source population (clipped to A-1)
+    prio: jnp.ndarray     # (P, G) float32 source priorities
+    jitter: jnp.ndarray   # ()     float32 priority noise scale
+
+
+def seed_population(accel, prio, jitter, key, num_accels: int):
+    """The Section V-C warm-seed discipline, in one place.
+
+    Clip the transferred accel genome to this problem's accelerator
+    count and re-randomize the priorities' low bits ([0, 0.999] clip
+    preserves the prio < 1 encoding invariant).  Pure JAX: the device
+    path (``MagmaStrategy.init``, inside the compiled scan) and the
+    legacy host path (``WarmStartEngine.init_population``) both call
+    exactly this, so the transfer math cannot diverge between them.
+    Returns ``(accel int32, prio float32)``.
+    """
+    accel = jnp.minimum(jnp.asarray(accel).astype(jnp.int32),
+                        num_accels - 1)
+    prio = jnp.clip(jnp.asarray(prio).astype(jnp.float32) + jitter *
+                    jax.random.normal(key, prio.shape), 0.0, 0.999)
+    return accel, prio.astype(jnp.float32)
 
 
 class SearchStrategy:
@@ -47,6 +87,9 @@ class SearchStrategy:
     # plain class attributes, NOT dataclass fields (subclasses override)
     name = "?"
     device_resident = True
+    # whether ``init`` accepts a Population / WarmStart hand-off (the
+    # memo's near-hit seeding is gated on this)
+    supports_init_population = False
 
     @property
     def ask_size(self) -> int:

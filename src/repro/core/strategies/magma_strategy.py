@@ -19,7 +19,8 @@ import jax.numpy as jnp
 
 from repro.core.encoding import Population, random_population
 from repro.core.magma import MagmaConfig, _next_generation_body
-from repro.core.strategies.base import SearchStrategy
+from repro.core.strategies.base import (SearchStrategy, WarmStart,
+                                        seed_population)
 from repro.core.strategies.registry import register
 
 
@@ -36,6 +37,7 @@ class MagmaStrategy(SearchStrategy):
     cfg: MagmaConfig = MagmaConfig()
     num_accels: Optional[int] = None     # bound per problem via .bind()
     name = "magma"
+    supports_init_population = True
 
     @property
     def ask_size(self) -> int:
@@ -50,11 +52,21 @@ class MagmaStrategy(SearchStrategy):
         # population from the sub-key (the split happens even with an
         # explicit init_population, preserving the warm-start trace)
         key, k0 = jax.random.split(key)
-        if init_population is not None:
-            pop = Population(*init_population)
-        else:
+        if init_population is None:
             pop = random_population(k0, self.cfg.population,
                                     params.lat.shape[-2], self.num_accels)
+        elif isinstance(init_population, WarmStart):
+            # device-side warm-start seeding (Section V-C), drawn from
+            # the sub-key that would have drawn a random population —
+            # the seeding stays inside the compiled scan, so a
+            # warm-started search differs from a cold one only in its
+            # initial population
+            ws = init_population
+            accel, prio = seed_population(ws.accel, ws.prio, ws.jitter,
+                                          k0, self.num_accels)
+            pop = Population(accel=accel, prio=prio)
+        else:
+            pop = Population(*init_population)
         return MagmaState(key=key, accel=pop.accel, prio=pop.prio)
 
     def ask(self, state: MagmaState):

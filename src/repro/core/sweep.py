@@ -103,44 +103,64 @@ class SweepResult(BatchSearchResult):
 
 def _row_search(key, params, strategy: SearchStrategy, generations: int,
                 evolve_last: bool, group_size: int, use_kernel: bool,
-                objective: Optional[str]):
+                objective: Optional[str], keep_population: bool = False,
+                warm=None):
     """One (scenario, seed) row — identical trace to ``run_strategy``'s
     scanned engine: seed the strategy state from the row key, run the
     shared scan.  Bit-for-bit parity with a standalone search depends on
-    the strategy's ``init`` key-split order; don't reorder."""
+    the strategy's ``init`` key-split order; don't reorder.
+
+    ``warm`` is an optional per-row ``strategies.WarmStart`` (the memo's
+    near-hit population seed, jittered device-side inside ``init``);
+    ``keep_population`` additionally emits the converged population —
+    extra scan *outputs* only, the search trace is unchanged, so both
+    variants stay bit-identical on the schedule outputs."""
     def eval_fn(a, pr):
         return evaluate_params(params, a, pr, num_accels=strategy.num_accels,
                                use_kernel=use_kernel, objective=objective)
 
-    state = strategy.init(key, params)
+    state = strategy.init(key, params, init_population=warm)
     out = scan_strategy(strategy, state, eval_fn, group_size, generations,
                         evolve_last)
+    if keep_population:
+        pop = strategy.population(out[4])
+        return out[:4] + (pop.accel, pop.prio)
     return out[:4]       # (best_fit, best_accel, best_prio, history)
 
 
 @lru_cache(maxsize=None)
 def _chunk_fn(mesh, strategy: SearchStrategy, generations: int,
               evolve_last: bool, group_size: int, use_kernel: bool,
-              objective: Optional[str]):
-    """Compiled (rows_keys, rows_params) -> per-row results, cached so
-    repeated sweeps with the same mesh/shape/strategy reuse one
+              objective: Optional[str], keep_population: bool = False,
+              warm: bool = False):
+    """Compiled (rows_keys, rows_params[, rows_warm]) -> per-row results,
+    cached so repeated sweeps with the same mesh/shape/strategy reuse one
     executable (strategies are frozen dataclasses: equal configs hash
     equal).  ``mesh is None`` is the single-device fallback: the same
-    vmapped search, just not wrapped in shard_map."""
-    search = jax.vmap(partial(
-        _row_search, strategy=strategy, generations=generations,
-        evolve_last=evolve_last, group_size=group_size,
-        use_kernel=use_kernel, objective=objective))
+    vmapped search, just not wrapped in shard_map.  ``keep_population``
+    and ``warm`` select the memo variants (extra outputs / a warm-start
+    input batch) — distinct executables, same search trace."""
+    base = partial(_row_search, strategy=strategy, generations=generations,
+                   evolve_last=evolve_last, group_size=group_size,
+                   use_kernel=use_kernel, objective=objective,
+                   keep_population=keep_population)
+    if warm:
+        search = jax.vmap(lambda k, p, w: base(k, p, warm=w))
+        n_in = 3
+    else:
+        search = jax.vmap(lambda k, p: base(k, p))
+        n_in = 2
     if mesh is None:
         return jax.jit(search)
     spec = PartitionSpec(SWEEP_AXIS)
     return jax.jit(shard_map(search, mesh=mesh,
-                             in_specs=(spec, spec), out_specs=spec))
+                             in_specs=(spec,) * n_in, out_specs=spec))
 
 
 def row_executable(strategy: SearchStrategy, generations: int,
                    evolve_last: bool, group_size: int, use_kernel: bool,
-                   objective: Optional[str], num_devices: int):
+                   objective: Optional[str], num_devices: int,
+                   keep_population: bool = False, warm: bool = False):
     """(compiled row-batch fn, device_put target) for ``num_devices``.
 
     The public face of the chunk executable cache: ``repro.stream``'s
@@ -151,12 +171,19 @@ def row_executable(strategy: SearchStrategy, generations: int,
     without blocking to overlap device compute with host-side analysis
     (JAX dispatch is async), and ``jax.block_until_ready`` the outputs
     when routing results.  ``N`` must be a multiple of ``num_devices``.
+
+    ``keep_population=True`` appends ``(pop_accel (N, P, G), pop_prio
+    (N, P, G))`` to the outputs (the converged populations the memo
+    records for warm-start transfer); ``warm=True`` makes the fn take a
+    third input — a stacked ``strategies.WarmStart`` with leading N —
+    seeding each row's initial population device-side.  Neither changes
+    the schedule outputs for a given (key, params): same search trace.
     """
     mesh = None if num_devices == 1 else _sweep_mesh(num_devices)
     target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
               if mesh is not None else jax.devices()[0])
     fn = _chunk_fn(mesh, strategy, generations, evolve_last, group_size,
-                   use_kernel, objective)
+                   use_kernel, objective, keep_population, warm)
     return fn, target
 
 
@@ -239,7 +266,9 @@ class RowsResult:
 def run_rows(rows_params: FitnessParams, rows_keys, *,
              strategy: SearchStrategy, generations: int, evolve_last: bool,
              use_kernel: bool = False, objective: Optional[str] = None,
-             sweep: SweepConfig | None = None) -> RowsResult:
+             sweep: SweepConfig | None = None,
+             memo=None, rows_family: Optional[Sequence[str]] = None
+             ) -> RowsResult:
     """Execute N independent (scenario, key) search rows on the device
     fleet — the execution core shared by :func:`run_sweep` (which flattens
     an S x K grid into rows) and the ``repro.stream`` admission stage
@@ -254,6 +283,13 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
     bit-identical to a standalone ``run_strategy`` with that scenario and
     key, regardless of device count, chunking, or which other rows share
     the batch.
+
+    ``memo`` (a ``repro.memo.ScheduleMemo``) records every solved row —
+    schedule plus, for strategies with population hand-off, the converged
+    population for warm-start transfer — under its content fingerprint as
+    the chunks drain; ``rows_family`` optionally tags each row's transfer
+    family (task-type string).  Recording adds outputs to the compiled
+    call, never changes the search trace: rows stay bit-identical.
     """
     sweep = sweep or SweepConfig()
     rows_keys = np.asarray(rows_keys)
@@ -272,8 +308,10 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
     padded = n_chunks * chunk_rows   # last partial chunk reuses the same
     rows_params, rows_keys = _pad_rows(rows_params, rows_keys, padded)
 
+    keep_pop = memo is not None and strategy.supports_init_population
     fn, target = row_executable(strategy, generations, evolve_last, G,
-                                use_kernel, objective, ndev)
+                                use_kernel, objective, ndev,
+                                keep_population=keep_pop)
 
     def put_chunk(i):
         sl = slice(i * chunk_rows, (i + 1) * chunk_rows)
@@ -301,12 +339,44 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
     def gather(j):
         return np.concatenate([o[j] for o in outs])[:N]
 
-    return RowsResult(
+    rr = RowsResult(
         best_fitness=gather(0), best_accel=gather(1), best_prio=gather(2),
         history_best=gather(3), generations=generations, wall_time_s=wall,
         num_devices=ndev, rows=N, padded_rows=padded, chunk_rows=chunk_rows,
         chunk_wall_s=walls,
     )
+    if memo is not None:
+        _record_rows(memo, rr, rows_params, rows_keys, strategy,
+                     generations, evolve_last, use_kernel, objective,
+                     rows_family,
+                     (gather(4), gather(5)) if keep_pop else None)
+    return rr
+
+
+def _record_rows(memo, rr: RowsResult, rows_params, rows_keys,
+                 strategy: SearchStrategy, generations: int,
+                 evolve_last: bool, use_kernel: bool,
+                 objective: Optional[str],
+                 rows_family: Optional[Sequence[str]], pops) -> None:
+    """Feed every solved row into the schedule memo.  The sampling budget
+    is reconstructed from (generations, evolve_last) — the fingerprint
+    depends only on that pair, so any budget that plans to the same
+    protocol shares the entry."""
+    from repro.memo.engine import row_view
+    P = strategy.ask_size
+    budget = generations * P + int(evolve_last)
+    for i in range(rr.rows):
+        fit = row_view(jax.tree.map(lambda x: np.asarray(x)[i], rows_params),
+                       num_accels=strategy.num_accels,
+                       use_kernel=use_kernel, objective=objective)
+        memo.record(
+            fit, strategy, budget, np.asarray(rows_keys[i]),
+            {"best_fitness": rr.best_fitness[i],
+             "best_accel": rr.best_accel[i],
+             "best_prio": rr.best_prio[i],
+             "history_best": rr.history_best[i]},
+            population=(pops[0][i], pops[1][i]) if pops is not None else None,
+            family="" if rows_family is None else rows_family[i])
 
 
 def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
@@ -316,7 +386,9 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
               num_accels: Optional[int] = None,
               use_kernel: bool = False,
               sweep: SweepConfig | None = None,
-              strategy: Union[SearchStrategy, str, None] = None
+              strategy: Union[SearchStrategy, str, None] = None,
+              memo=None,
+              memo_family: Union[str, Sequence[str]] = ""
               ) -> SweepResult:
     """Run an S x K (scenario x seed) search grid sharded across devices.
 
@@ -331,6 +403,11 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
     with ``(S, K)`` leading axes and row ``[s, k]`` bit-identical to a
     standalone ``run_strategy(strategy, scenarios[s], seed=seeds[k])``
     (for MAGMA: ``magma_search``) regardless of device count or chunking.
+
+    ``memo`` (a ``repro.memo.ScheduleMemo``) records every solved row for
+    exact-hit replay / warm-start transfer; ``memo_family`` tags the
+    rows' transfer family — one string for the whole grid or one per
+    scenario.
     """
     params, num_accels, use_kernel, objective = normalize_scenarios(
         scenarios, num_accels, use_kernel)
@@ -351,9 +428,19 @@ def run_sweep(scenarios: Union[Sequence[FitnessFn], FitnessParams],
     keys = np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds])
     rows_params, rows_keys, N = _flatten_grid(params, keys)
 
+    if isinstance(memo_family, str):
+        rows_family = [memo_family] * N
+    else:                    # one family per scenario, repeated per seed
+        memo_family = list(memo_family)
+        if len(memo_family) != S:
+            raise ValueError(
+                f"memo_family must be one string or one per scenario "
+                f"({S}); got {len(memo_family)}")
+        rows_family = [f for f in memo_family for _ in seeds]
     rr = run_rows(rows_params, rows_keys, strategy=strategy,
                   generations=generations, evolve_last=evolve_last,
-                  use_kernel=use_kernel, objective=objective, sweep=sweep)
+                  use_kernel=use_kernel, objective=objective, sweep=sweep,
+                  memo=memo, rows_family=rows_family)
 
     def grid(x, trailing):
         return x.reshape((S, len(seeds)) + trailing)

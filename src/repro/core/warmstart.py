@@ -1,4 +1,4 @@
-"""Warm-start engine (Section V-C).
+"""Warm-start engine (Section V-C) — now a thin client of ``repro.memo``.
 
 Caches the converged population per *task type* (Vision / Lang / Recom /
 Mix).  When a new group of the same type arrives, the cached population —
@@ -10,39 +10,87 @@ Transfer is valid across groups because groups of the same task type share
 the (model, layer)-distribution even though the concrete jobs differ; the
 accel-selection genome encodes "which kind of job goes to which kind of
 core", which is the transferable knowledge.
+
+Since the ``repro.memo`` subsystem landed this engine no longer owns its
+storage: populations live as records in a :class:`repro.memo.MemoStore`
+(pass one backed by a directory to persist warm-start knowledge across
+processes), the task-type string is just the record's transfer *family*,
+and lookup is the memo's nearest-fingerprint scan restricted to that
+family (these legacy records carry no table features, so "nearest"
+degrades to most-recently-remembered — exactly the old last-write-wins
+behavior).  The full generalization — scenario-table features, exact-hit
+replay, device-side seeding via ``strategies.WarmStart`` — is
+``repro.memo.ScheduleMemo``; prefer ``M3E(memo=...)`` /
+``StreamingScheduler(memo=...)`` in new code.
+
+Seed discipline: ``init_population`` is a pure function of ``(key, stored
+population)`` — the jitter is drawn from the caller's key, so the same key
+always yields the same warm-started population (pinned by
+tests/test_warmstart.py, same convention as tests/test_strategies.py).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import hashlib
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.encoding import Population
 
 
+def _family(task_type: str) -> Tuple:
+    return ("warmstart", str(task_type))
+
+
 class WarmStartEngine:
-    def __init__(self, jitter: float = 0.02):
-        self._store: Dict[str, Population] = {}
+    def __init__(self, jitter: float = 0.02, store=None):
+        from repro.memo.store import MemoStore
+        self.store = store if store is not None else MemoStore()
         self.jitter = jitter
 
     def remember(self, task_type: str, population: Population) -> None:
-        self._store[task_type] = population
+        from repro.memo.store import MemoRecord
+        accel = np.asarray(population.accel)
+        prio = np.asarray(population.prio)
+        # content-addressed like every memo record: the digest of the
+        # population itself (re-remembering identical knowledge is a
+        # no-op overwrite, new knowledge appends)
+        h = hashlib.sha256()
+        h.update(f"warmstart|{task_type}|".encode())
+        h.update(np.ascontiguousarray(accel).tobytes())
+        h.update(np.ascontiguousarray(prio).tobytes())
+        self.store.put(MemoRecord(
+            fingerprint=h.hexdigest(), family=_family(task_type),
+            arrays={"pop_accel": accel, "pop_prio": prio},
+            meta={"task_type": str(task_type),
+                  "group_size": int(accel.shape[1])}))
 
     def has(self, task_type: str) -> bool:
-        return task_type in self._store
+        return bool(self.store.family(_family(task_type)))
+
+    def _latest(self, task_type: str, group_size: int):
+        """Most recently remembered population of this task type with a
+        matching group size (the legacy last-write-wins semantics)."""
+        for rec in reversed(self.store.family(_family(task_type))):
+            if rec.has_population and \
+                    rec.arrays["pop_accel"].shape[1] == group_size:
+                return rec
+        return None
 
     def init_population(self, task_type: str, key: jax.Array,
-                        group_size: int, num_accels: int) -> Optional[Population]:
-        """Warm-started population, or None if this task type is unseen."""
-        cached = self._store.get(task_type)
-        if cached is None:
+                        group_size: int, num_accels: int
+                        ) -> Optional[Population]:
+        """Warm-started population, or None if this task type is unseen
+        (or only seen at other group sizes: fall back to random init)."""
+        rec = self._latest(task_type, group_size)
+        if rec is None:
             return None
-        P, G = cached.accel.shape
-        if G != group_size:
-            return None  # different group size: fall back to random init
+        from repro.core.strategies.base import seed_population
         kp, kj = jax.random.split(key)
-        accel = jnp.minimum(cached.accel, num_accels - 1)
-        prio = jnp.clip(cached.prio + self.jitter *
-                        jax.random.normal(kj, cached.prio.shape), 0.0, 0.999)
-        return Population(accel=accel, prio=prio.astype(jnp.float32))
+        accel, prio = seed_population(
+            jnp.asarray(rec.arrays["pop_accel"], dtype=jnp.int32),
+            jnp.asarray(rec.arrays["pop_prio"], dtype=jnp.float32),
+            self.jitter, kj, num_accels)
+        return Population(accel=accel, prio=prio)

@@ -1,0 +1,35 @@
+"""repro.memo — persistent schedule memo: compute most schedules once.
+
+Content-addressed reuse of solved mapping problems, in two tiers:
+
+  exact hit   the scenario + strategy + protocol + PRNG key fingerprint
+              matches a stored row: the schedule is replayed bit-for-bit
+              with no search dispatched (``ScheduleMemo.lookup``);
+  near hit    same transfer family (``(G, A)`` shape, strategy,
+              objective, task family) with different tables: the nearest
+              stored scenario donates its converged population as a
+              ``WarmStart`` seed consumed device-side by
+              ``SearchStrategy.init`` (``ScheduleMemo.warm_start``) —
+              the paper's Section V-C warm-start generalized to
+              nearest-fingerprint lookup.
+
+Backed by :class:`MemoStore` — an append-only, multi-process-safe
+on-disk store (npz payloads + JSONL index, LRU byte-budget eviction,
+compaction) or pure in-memory when no path is given.  Integrated end to
+end: ``repro.core.sweep.run_rows(memo=...)`` records every solved row,
+``repro.stream.StreamingScheduler(memo=...)`` consults the memo at
+admission (exact hits bypass the dispatch queue), and ``M3E(memo=...)``
+/ ``serve.engine`` route single searches through it.
+"""
+from repro.memo.fingerprint import (family_key, feature_vector,
+                                    scenario_digest, search_fingerprint,
+                                    strategy_signature)
+from repro.memo.store import MemoRecord, MemoStore
+from repro.memo.engine import MemoHit, MemoStats, ScheduleMemo
+
+__all__ = [
+    "family_key", "feature_vector", "scenario_digest",
+    "search_fingerprint", "strategy_signature",
+    "MemoRecord", "MemoStore",
+    "MemoHit", "MemoStats", "ScheduleMemo",
+]

@@ -1,0 +1,304 @@
+"""ScheduleMemo — exact-hit replay and warm-start transfer over a MemoStore.
+
+The fastest search is the one you skip (MARS, arXiv:2307.12234): a
+service at fleet scale re-sees the same and near-same mapping problems
+constantly.  The memo turns every solved row into reusable knowledge:
+
+  exact hit   the full search fingerprint matches
+              (:func:`repro.memo.fingerprint.search_fingerprint`): the
+              stored schedule IS the answer, bit-for-bit — no search is
+              dispatched.  ``lookup`` returns a :class:`MemoHit` whose
+              arrays equal the standalone ``magma_search`` / ``run_sweep``
+              row byte-for-byte (gated by tests/test_memo.py).
+  near hit    same transfer family (``(G, A)`` + strategy + objective +
+              task family) but different tables: the nearest stored
+              scenario (L2 over table features) donates its converged
+              population as a :class:`~repro.core.strategies.WarmStart`.
+              The seeding itself happens inside the strategy's compiled
+              ``init`` (priorities re-jittered device-side from the run
+              key), so a warm-seeded search differs from a cold one only
+              in its initial population — Section V-C generalized from
+              four task-type strings to nearest-fingerprint lookup.
+
+One ``ScheduleMemo`` may back many clients at once (``M3E.search``, the
+stream's admission stage, ``run_sweep`` recording): the store is locked,
+and recording the same fingerprint twice is idempotent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.strategies.base import WarmStart
+from repro.memo.fingerprint import (family_key, feature_vector,
+                                    search_fingerprint, strategy_signature)
+from repro.memo.store import MemoRecord, MemoStore
+
+
+@dataclasses.dataclass
+class MemoHit:
+    """An exact-hit replay: the stored row, bit-for-bit.
+
+    ``warm_seeded`` says how the stored row was solved: ``False`` means
+    the replay is bit-identical to the standalone cold search with this
+    fingerprint; ``True`` means it is bit-identical to what the memoized
+    service previously *returned* for this request (a warm-seeded
+    search).  ``population`` is the converged hand-off when the record
+    carries one.
+    """
+    fingerprint: str
+    best_fitness: float
+    best_accel: np.ndarray      # (G,) int32
+    best_prio: np.ndarray       # (G,) float32
+    history_best: np.ndarray    # (T,) float32
+    generations: int
+    n_samples: int
+    warm_seeded: bool = False
+    population: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    def to_search_result(self):
+        """The replay as the ``SearchResult`` the skipped search would
+        have returned (``wall_time_s=0.0``: nothing ran)."""
+        from repro.core.encoding import Population
+        from repro.core.magma import SearchResult
+        per_gen = self.n_samples // max(self.generations, 1)
+        return SearchResult(
+            best_fitness=float(self.best_fitness),
+            best_accel=np.asarray(self.best_accel),
+            best_prio=np.asarray(self.best_prio),
+            history_samples=per_gen * np.arange(1, self.generations + 1),
+            history_best=np.asarray(self.history_best, dtype=np.float64),
+            n_samples=self.n_samples,
+            wall_time_s=0.0,
+            final_population=(None if self.population is None else
+                              Population(accel=self.population[0],
+                                         prio=self.population[1])),
+        )
+
+
+@dataclasses.dataclass
+class MemoStats:
+    exact_hits: int = 0
+    near_hits: int = 0
+    misses: int = 0
+    records: int = 0
+
+    def summary(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class ScheduleMemo:
+    """Content-addressed schedule memo (exact replay + warm transfer).
+
+        memo = ScheduleMemo(MemoStore("/var/cache/repro-memo",
+                                      byte_budget=1 << 30))
+        hit = memo.lookup(fit, strategy, budget=2_000, seed=7)
+        if hit is None:
+            ws = memo.warm_start(fit, strategy, family=group.task)
+            res = run_strategy(strategy, fit, budget=2_000, seed=7,
+                               init_population=ws, keep_population=True)
+            memo.record(fit, strategy, 2_000, 7, res,
+                        population=res.final_population,
+                        family=group.task)
+
+    ``jitter`` is the warm-start priority noise scale (Section V-C:
+    re-randomize the low bits to preserve diversity); ``near=False``
+    disables warm transfer (exact replay only).
+    """
+
+    def __init__(self, store: Optional[MemoStore] = None,
+                 jitter: float = 0.02, near: bool = True):
+        # NOT `store or MemoStore()`: an empty MemoStore is len()==0 and
+        # would be silently replaced by a fresh in-memory one
+        self.store = store if store is not None else MemoStore()
+        self.jitter = float(jitter)
+        self.near = bool(near)
+        self.stats = MemoStats()
+        self._lock = threading.Lock()
+
+    # -- key plumbing ---------------------------------------------------------
+    @staticmethod
+    def _protocol(strategy, budget: int) -> Tuple[int, bool, int]:
+        from repro.core.strategies import plan_generations
+        generations, evolve_last = plan_generations(int(budget),
+                                                    strategy.ask_size)
+        return generations, evolve_last, strategy.ask_size
+
+    @staticmethod
+    def _key_data(seed_or_key) -> np.ndarray:
+        """Raw PRNG key data for an int seed or an already-built key."""
+        import jax
+        if isinstance(seed_or_key, (int, np.integer)):
+            return np.asarray(jax.random.PRNGKey(int(seed_or_key)))
+        return np.asarray(seed_or_key)
+
+    def fingerprint(self, fit, strategy, budget: int, seed_or_key) -> str:
+        """The exact-hit content address of one search row."""
+        strategy = strategy.bind(fit.num_accels)
+        generations, evolve_last, _ = self._protocol(strategy, budget)
+        return search_fingerprint(
+            fit.params, self._key_data(seed_or_key), strategy,
+            generations=generations, evolve_last=evolve_last,
+            use_kernel=fit.use_kernel, objective=fit.objective)
+
+    # -- exact hit ------------------------------------------------------------
+    def lookup(self, fit, strategy, budget: int, seed_or_key,
+               include_warm: bool = True) -> Optional[MemoHit]:
+        """Replay of a previously solved row, or None.
+
+        A hit replays the stored schedule bit-for-bit.  When the stored
+        row was solved *cold* that equals the standalone
+        ``magma_search``/``run_sweep`` row for this fingerprint; when it
+        was *warm-seeded* it equals what the memoized service returned
+        the first time (idempotent replay — a re-seen request must not
+        be re-searched just because its first solve was seeded).
+        ``include_warm=False`` restricts hits to cold records.
+        """
+        fp = self.fingerprint(fit, strategy, budget, seed_or_key)
+        rec = self.store.get(fp)
+        if rec is not None and rec.meta.get("warm_seeded") \
+                and not include_warm:
+            rec = None
+        with self._lock:
+            if rec is None:
+                self.stats.misses += 1
+                return None
+            self.stats.exact_hits += 1
+        return MemoHit(
+            fingerprint=fp,
+            best_fitness=float(
+                np.asarray(rec.arrays["best_fitness"]).reshape(-1)[0]),
+            best_accel=rec.arrays["best_accel"],
+            best_prio=rec.arrays["best_prio"],
+            history_best=rec.arrays["history_best"],
+            generations=int(rec.meta.get(
+                "generations", len(rec.arrays["history_best"]))),
+            n_samples=int(rec.meta.get("n_samples", 0)),
+            warm_seeded=bool(rec.meta.get("warm_seeded", False)),
+            population=((rec.arrays["pop_accel"], rec.arrays["pop_prio"])
+                        if rec.has_population else None),
+        )
+
+    # -- near hit -------------------------------------------------------------
+    def warm_start(self, fit, strategy, family: str = "",
+                   exclude: Optional[str] = None) -> Optional[WarmStart]:
+        """Nearest-fingerprint population transfer, or None.
+
+        Only strategies that accept an ``init_population``
+        (``supports_init_population``) can be seeded; candidates are the
+        family's stored records that carry a converged population, ranked
+        by L2 distance between table feature vectors.  The population is
+        resized host-side to the strategy's ask size (row tiling — a
+        deterministic reshape); jittering happens device-side in
+        ``init``.  ``exclude`` skips one fingerprint (a row should not
+        seed itself when record-then-research patterns replay a trace).
+        """
+        strategy = strategy.bind(fit.num_accels)
+        if not (self.near and strategy.supports_init_population):
+            return None
+        fam = family_key(fit.params, strategy, use_kernel=fit.use_kernel,
+                         objective=fit.objective, family=family)
+        cands = [r for r in self.store.family(fam)
+                 if r.has_population and r.fingerprint != exclude]
+        if not cands:
+            return None
+        feats = feature_vector(fit.params)
+        best, best_d = None, np.inf
+        for r in cands:           # insertion order: on ties, newest wins
+            rf = r.features
+            d = (float(np.linalg.norm(rf - feats))
+                 if rf is not None and rf.shape == feats.shape
+                 else np.inf)     # population-only record (no tables seen)
+            if best is None or d <= best_d:
+                best, best_d = r, d
+        with self._lock:
+            self.stats.near_hits += 1
+        P = strategy.ask_size
+        accel = _resize_rows(best.arrays["pop_accel"], P).astype(np.int32)
+        prio = _resize_rows(best.arrays["pop_prio"], P).astype(np.float32)
+        return WarmStart(accel=accel, prio=prio,
+                         jitter=np.float32(self.jitter))
+
+    # -- recording ------------------------------------------------------------
+    def record(self, fit, strategy, budget: int, seed_or_key, row,
+               population=None, family: str = "", warm=None) -> str:
+        """Store one solved row (idempotent per fingerprint).
+
+        ``row`` is anything with ``best_fitness`` / ``best_accel`` /
+        ``best_prio`` / ``history_best`` (a ``SearchResult``, a
+        ``StreamResult``, or a plain dict); ``population`` is the
+        converged ``(accel, prio)`` hand-off enabling near-hit transfer
+        (None records the schedule only).  ``warm`` is the ``WarmStart``
+        the row was seeded with, if any: the record is flagged
+        ``warm_seeded`` so ``lookup`` can distinguish cold-search
+        bit-identity from service-idempotent replay (and strict callers
+        can refuse warm records with ``include_warm=False``).  A cold
+        solve of the same fingerprint later overwrites a warm record —
+        the store upgrades toward the strict guarantee.  Returns the
+        fingerprint.
+        """
+        strategy = strategy.bind(fit.num_accels)
+        generations, evolve_last, P = self._protocol(strategy, budget)
+        fp = self.fingerprint(fit, strategy, budget, seed_or_key)
+        get = (row.get if isinstance(row, dict)
+               else lambda k: getattr(row, k))
+        arrays = {
+            "best_fitness": np.asarray(get("best_fitness"),
+                                       dtype=np.float32),
+            "best_accel": np.asarray(get("best_accel")),
+            "best_prio": np.asarray(get("best_prio")),
+            "history_best": np.asarray(get("history_best")),
+            "features": feature_vector(fit.params),
+        }
+        if population is not None:
+            pa, pp = population
+            arrays["pop_accel"] = np.asarray(pa)
+            arrays["pop_prio"] = np.asarray(pp)
+        fam = family_key(fit.params, strategy, use_kernel=fit.use_kernel,
+                         objective=fit.objective, family=family)
+        self.store.put(MemoRecord(
+            fingerprint=fp, family=fam, arrays=arrays,
+            meta={"strategy": strategy_signature(strategy),
+                  "generations": generations,
+                  "evolve_last": evolve_last,
+                  "n_samples": generations * P,
+                  "budget": int(budget),
+                  "family": family,
+                  "warm_seeded": warm is not None}))
+        with self._lock:
+            self.stats.records += 1
+        return fp
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+
+@dataclasses.dataclass(frozen=True)
+class _RowView:
+    """The minimal fit-shaped view of one sweep row (``run_rows`` has
+    sliced ``FitnessParams`` + statics, not a ``FitnessFn``)."""
+    params: object
+    num_accels: int
+    use_kernel: bool
+    objective: Optional[str]
+
+
+def row_view(params, *, num_accels: int, use_kernel: bool,
+             objective: Optional[str]) -> _RowView:
+    """Adapt a single row's ``FitnessParams`` slice + executable statics
+    to the ``fit``-like object the memo APIs take."""
+    return _RowView(params=params, num_accels=num_accels,
+                    use_kernel=bool(use_kernel), objective=objective)
+
+
+def _resize_rows(x: np.ndarray, rows: int) -> np.ndarray:
+    """Resize a (P_src, G) population to (rows, G) by tiling/truncating
+    whole rows — deterministic, shape-static (host-side)."""
+    x = np.asarray(x)
+    if x.shape[0] == rows:
+        return x
+    reps = -(-rows // x.shape[0])
+    return np.tile(x, (reps, 1))[:rows]

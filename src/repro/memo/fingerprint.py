@@ -1,0 +1,123 @@
+"""Scenario fingerprints — content addresses for solved mapping problems.
+
+The memo's exact-hit guarantee is bit-identity: a stored schedule may be
+replayed without a search ONLY when everything that determined the
+computed bits is identical.  That set is exactly what the compiled row
+executable consumes, and the fingerprint is a SHA-256 digest over it:
+
+  scenario tables   the f32 ``FitnessParams`` leaves the evaluator
+                    actually reads (lat/bw/energy tables, system BW,
+                    FLOPs, objective code) — the same cost-relevant-
+                    fields-only discipline as ``JobAnalyzer.profile_key``
+                    (names and provenance are excluded: two requests that
+                    analyze to identical tables share one memo entry)
+  static config     group size, accelerator count, objective name,
+                    kernel flag — the executable's specialization axes
+  strategy          the bound strategy's frozen-dataclass ``repr`` (name
+                    + every hyper-parameter; equal configs hash equal)
+  search protocol   (generations, evolve_last) — derived from the budget
+                    exactly like ``plan_generations``
+  PRNG key          the raw key *data* seeding the row, so a sweep row
+                    keyed with ``PRNGKey(s)`` and a standalone search
+                    with ``seed=s`` fingerprint identically
+
+Near hits relax the tables: :func:`family_key` keeps only the shape +
+task-family axes a transferred population is valid across (same ``(G,
+A)``, strategy, objective — Section V-C's transfer argument), and
+:func:`feature_vector` summarizes the tables so the nearest stored
+scenario (L2 over log-scale column statistics) donates its converged
+population.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.fitness import FitnessParams
+
+
+def strategy_signature(strategy) -> str:
+    """Stable identity of a bound strategy: frozen dataclasses repr as
+    ``Name(field=value, ...)``, so equal configs produce equal signatures
+    and any hyper-parameter change produces a new one."""
+    return repr(strategy)
+
+
+def _table_bytes(params: FitnessParams) -> bytes:
+    """The evaluator-visible scenario content, canonicalized: every leaf
+    as little-endian f32 bytes (the dtype the device math runs in), plus
+    the objective code as i32."""
+    h = []
+    for leaf in (params.lat, params.bw, params.bw_sys, params.flops,
+                 params.energy):
+        h.append(np.ascontiguousarray(
+            np.asarray(leaf, dtype=np.float32)).astype("<f4").tobytes())
+    h.append(np.asarray(params.objective_code,
+                        dtype=np.int32).astype("<i4").tobytes())
+    return b"".join(h)
+
+
+def scenario_digest(params: FitnessParams, *, num_accels: int,
+                    use_kernel: bool, objective: Optional[str]) -> str:
+    """Digest of one scenario's cost-relevant content (no search axes)."""
+    sha = hashlib.sha256()
+    G, A = int(params.lat.shape[-2]), int(params.lat.shape[-1])
+    sha.update(f"scenario|G={G}|A={A}|num_accels={num_accels}"
+               f"|kernel={bool(use_kernel)}|objective={objective}"
+               .encode())
+    sha.update(_table_bytes(params))
+    return sha.hexdigest()
+
+
+def search_fingerprint(params: FitnessParams, key, strategy, *,
+                       generations: int, evolve_last: bool,
+                       use_kernel: bool, objective: Optional[str]) -> str:
+    """Content address of one (scenario, strategy, protocol, key) row."""
+    sha = hashlib.sha256()
+    sha.update(scenario_digest(params, num_accels=strategy.num_accels,
+                               use_kernel=use_kernel,
+                               objective=objective).encode())
+    sha.update(f"|{strategy_signature(strategy)}"
+               f"|gens={int(generations)}|last={bool(evolve_last)}|"
+               .encode())
+    sha.update(np.ascontiguousarray(
+        np.asarray(key, dtype=np.uint32)).astype("<u4").tobytes())
+    return sha.hexdigest()
+
+
+def family_key(params: FitnessParams, strategy, *, use_kernel: bool,
+               objective: Optional[str], family: str = "") -> Tuple:
+    """The transfer-validity class of a scenario (near-hit candidates).
+
+    A converged population is transferable across scenarios that share
+    the encoding shape and the task-type distribution: same ``(G, A)``,
+    same strategy *kind* (the genome layout), same objective and kernel
+    flag, same task family string (``JobGroup.task`` / the trace's mix —
+    "" when the caller has no provenance, which still groups by shape).
+    """
+    G, A = int(params.lat.shape[-2]), int(params.lat.shape[-1])
+    return (strategy.name, G, A, bool(use_kernel), str(objective),
+            str(family))
+
+
+def feature_vector(params: FitnessParams) -> np.ndarray:
+    """Compact table summary for nearest-fingerprint lookup.
+
+    Per accelerator column: mean/std/min/max of log10 latency and of
+    log10 required BW, plus the log10 system BW and log10 total FLOPs —
+    ``(8A + 2,)`` float64.  Log scale because the tables span decades
+    (1 GB/s vs 64 GB/s scenarios must be *far*, not negligibly close to
+    everything).  Same family => same ``A`` => same length, so L2
+    distance is well-defined within a family.
+    """
+    def col_stats(x):
+        lx = np.log10(np.maximum(np.asarray(x, dtype=np.float64), 1e-30))
+        return np.concatenate([lx.mean(0), lx.std(0), lx.min(0), lx.max(0)])
+
+    lat, bw = np.asarray(params.lat), np.asarray(params.bw)
+    extras = np.log10(np.maximum(np.asarray(
+        [float(params.bw_sys), float(params.flops)], dtype=np.float64),
+        1e-30))
+    return np.concatenate([col_stats(lat), col_stats(bw), extras])

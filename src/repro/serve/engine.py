@@ -124,7 +124,7 @@ class MultiTenantEngine:
                  system_bw: float = 64e9, group_size: int = 64,
                  decode_window: int = 32, budget: int = 2_000,
                  method: str = "magma", seed: int = 0,
-                 stream=None):
+                 stream=None, memo=None):
         self.tenants = {t.name: t for t in tenants}
         self.submeshes = list(submeshes or default_submeshes())
         self.system_bw = float(system_bw)
@@ -139,6 +139,12 @@ class MultiTenantEngine:
         # first device-resident method is scheduled
         self._stream = stream
         self._owns_stream = False
+        # schedule memo (repro.memo.ScheduleMemo) consulted by the stream
+        # at admission: a re-seen job group replays its stored mapping
+        # bit-for-bit with no search; near-same groups warm-start.  Only
+        # applies to the service this engine creates — an injected
+        # ``stream`` keeps whatever memo it was built with.
+        self.memo = memo
 
     def stream_service(self):
         """The ``repro.stream.StreamingScheduler`` this engine is a client
@@ -149,7 +155,8 @@ class MultiTenantEngine:
             # prepared), so a minimal analysis pool suffices
             self._stream = StreamingScheduler(
                 budget=self.budget,
-                stream=StreamConfig(analysis_workers=1))
+                stream=StreamConfig(analysis_workers=1),
+                memo=self.memo)
             self._owns_stream = True
         return self._stream
 

@@ -79,6 +79,9 @@ class ReadyScenario:
     analysis_start_s: float      # offsets from the service clock's zero
     ready_s: float
     strategy: object = None      # SearchStrategy override; None = service's
+    warm: object = None          # strategies.WarmStart memo near-hit seed
+                                 # (set at admission; warm rows batch
+                                 # separately from cold ones)
 
     @property
     def analysis_wall_s(self) -> float:

@@ -41,6 +41,11 @@ class StreamMetrics:
     device_idle_frac: float         # 1 - device_busy/wall
     num_batches: int
     mean_batch_fill: float          # real rows / padded rows, averaged
+    # schedule-memo reuse (0 when the service runs without a memo):
+    # exact hits are answered from the store with NO device dispatch;
+    # warm hits went to the device seeded from a stored population
+    memo_exact_hits: int = 0
+    memo_warm_hits: int = 0
 
     def summary(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
@@ -68,4 +73,8 @@ def compute_metrics(results, batches, wall_s: float) -> StreamMetrics:
         device_idle_frac=max(0.0, 1.0 - dev / wall),
         num_batches=len(batches),
         mean_batch_fill=float(np.mean(fills)) if fills else 0.0,
+        memo_exact_hits=sum(bool(getattr(r, "memo_exact", False))
+                            for r in results),
+        memo_warm_hits=sum(bool(getattr(r, "warm_seeded", False))
+                           for r in results),
     )

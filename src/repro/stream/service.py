@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core.fitness import FitnessFn
 from repro.core.magma import MagmaConfig, SearchResult
-from repro.core.strategies import SearchStrategy, plan_generations
+from repro.core.strategies import SearchStrategy, WarmStart, plan_generations
 from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
 from repro.stream.analysis import AnalysisPool, ReadyScenario
 from repro.stream.metrics import StreamMetrics, compute_metrics
@@ -126,6 +126,11 @@ class StreamResult:
     ready_s: float
     dispatch_s: float
     done_s: float
+    # schedule-memo provenance: an exact hit was replayed from the store
+    # (no device dispatch — dispatch_s == done_s == the admission
+    # instant); a warm-seeded row searched from a transferred population
+    memo_exact: bool = False
+    warm_seeded: bool = False
 
     @property
     def latency_s(self) -> float:
@@ -184,9 +189,17 @@ class StreamingScheduler:
                  strategy: Union[SearchStrategy, str, None] = None,
                  cfg: Optional[MagmaConfig] = None,
                  budget: int = 2_000,
-                 stream: Optional[StreamConfig] = None):
+                 stream: Optional[StreamConfig] = None,
+                 memo=None):
         self.stream = stream or StreamConfig()
         self.budget = int(budget)
+        # the schedule memo (repro.memo.ScheduleMemo) consulted at
+        # admission: exact hits are answered from the store and NEVER
+        # enter the dispatch queue; misses are warm-seeded from the
+        # nearest stored scenario when the family has one.  Every routed
+        # row is recorded back (with its converged population), so a
+        # long-lived service computes most schedules once.
+        self.memo = memo
         self._strategy = _resolve_strategy(strategy, cfg)
         if not self._strategy.device_resident:
             raise ValueError(
@@ -220,11 +233,14 @@ class StreamingScheduler:
 
     def _compat_key(self, ready: ReadyScenario) -> Tuple:
         """Everything a compiled row executable is specialized on: only
-        scenarios agreeing on all of it may share a device batch."""
+        scenarios agreeing on all of it may share a device batch.  Warm-
+        seeded rows take a different executable (extra WarmStart input),
+        so the warm flag is a compatibility axis too."""
         fit = ready.fit
         budget = ready.request.budget or self.budget
         return (self._resolve_override(ready.strategy), fit.group_size,
-                fit.num_accels, fit.use_kernel, fit.objective, budget)
+                fit.num_accels, fit.use_kernel, fit.objective, budget,
+                ready.warm is not None)
 
     def _bucket(self, n: int) -> int:
         b = 1
@@ -232,9 +248,14 @@ class StreamingScheduler:
             b *= 2
         return min(b, self.stream.batch_rows)
 
+    def _keep_population(self, strategy: SearchStrategy) -> bool:
+        """Whether dispatches emit converged populations (memo attached
+        and the strategy hands populations off)."""
+        return self.memo is not None and strategy.supports_init_population
+
     def _dispatch(self, compat_key: Tuple, members: List[ReadyScenario]
                   ) -> _Inflight:
-        base, G, A, use_kernel, objective, budget = compat_key
+        base, G, A, use_kernel, objective, budget, is_warm = compat_key
         strategy = base.bind(A)
         generations, evolve_last = plan_generations(budget,
                                                     strategy.ask_size)
@@ -253,11 +274,21 @@ class StreamingScheduler:
             *[m.fit.params for m in members])
         params, keys = _pad_rows(params, keys, padded)
 
-        fn, target = row_executable(strategy, generations, evolve_last, G,
-                                    use_kernel, objective, ndev)
+        fn, target = row_executable(
+            strategy, generations, evolve_last, G, use_kernel, objective,
+            ndev, keep_population=self._keep_population(base), warm=is_warm)
         keys_d = jax.device_put(keys, target)
         params_d = jax.device_put(params, target)
-        out = fn(keys_d, params_d)      # async dispatch: returns immediately
+        if is_warm:
+            warm = WarmStart(
+                accel=np.stack([np.asarray(m.warm.accel) for m in members]),
+                prio=np.stack([np.asarray(m.warm.prio) for m in members]),
+                jitter=np.asarray([m.warm.jitter for m in members],
+                                  dtype=np.float32))
+            warm, _ = _pad_rows(warm, keys[:len(members)], padded)
+            out = fn(keys_d, params_d, jax.device_put(warm, target))
+        else:
+            out = fn(keys_d, params_d)  # async dispatch: returns immediately
         return _Inflight(out=out, members=members, dispatch_s=self._clock(),
                          padded_rows=padded, num_devices=ndev,
                          compat_key=compat_key)
@@ -278,8 +309,10 @@ class StreamingScheduler:
     def _route(self, inf: _Inflight, results: List[StreamResult]) -> None:
         jax.block_until_ready(inf.out)
         done = self._clock()
-        bf, ba, bp, hist = (np.asarray(o) for o in inf.out)
-        base, _, A, _, _, budget = inf.compat_key
+        outs = [np.asarray(o) for o in inf.out]
+        bf, ba, bp, hist = outs[:4]
+        pops = outs[4:6] if len(outs) >= 6 else None
+        base, _, A, _, _, budget, is_warm = inf.compat_key
         strategy = base.bind(A)
         generations, _ = plan_generations(budget, strategy.ask_size)
         n_samples = strategy.ask_size * generations
@@ -294,7 +327,16 @@ class StreamingScheduler:
                 ready_s=m.ready_s,
                 dispatch_s=inf.dispatch_s,
                 done_s=done,
+                warm_seeded=is_warm,
             ))
+            if self.memo is not None:
+                self.memo.record(
+                    m.fit, strategy, budget, m.request.seed,
+                    {"best_fitness": bf[i], "best_accel": ba[i],
+                     "best_prio": bp[i], "history_best": hist[i]},
+                    population=((pops[0][i], pops[1][i])
+                                if pops is not None else None),
+                    family=m.request.mix, warm=m.warm)
         self.last_batches.append(_BatchRecord(
             dispatch_s=inf.dispatch_s, done_s=done, rows=len(inf.members),
             padded_rows=inf.padded_rows, num_devices=inf.num_devices,
@@ -325,6 +367,34 @@ class StreamingScheduler:
         results: List[StreamResult] = []
 
         def admit(ready: ReadyScenario):
+            if self.memo is not None:
+                strategy = self._resolve_override(ready.strategy)
+                budget = ready.request.budget or self.budget
+                hit = self.memo.lookup(ready.fit, strategy, budget,
+                                       ready.request.seed)
+                if hit is not None:
+                    # exact hit: the stored schedule IS the answer,
+                    # bit-for-bit — no device dispatch, the request never
+                    # enters a queue (dispatch_s == done_s == now)
+                    now = self._clock()
+                    results.append(StreamResult(
+                        request=ready.request,
+                        best_fitness=float(hit.best_fitness),
+                        best_accel=np.asarray(hit.best_accel),
+                        best_prio=np.asarray(hit.best_prio),
+                        history_best=np.asarray(hit.history_best),
+                        n_samples=hit.n_samples,
+                        arrival_s=ready.request.arrival_s,
+                        analysis_start_s=ready.analysis_start_s,
+                        ready_s=ready.ready_s,
+                        dispatch_s=now, done_s=now,
+                        memo_exact=True,
+                    ))
+                    return
+                # miss: seed from the nearest stored scenario of the
+                # same transfer family, when one exists
+                ready.warm = self.memo.warm_start(
+                    ready.fit, strategy, family=ready.request.mix)
             queues.setdefault(self._compat_key(ready), deque()).append(ready)
 
         for p in prepared:
@@ -433,12 +503,29 @@ class StreamingScheduler:
                        req.objective, req.budget or self.budget)
                 reps.setdefault(sig, req)
             seen: Dict[Tuple, ReadyScenario] = {}
+
+            def note(r: ReadyScenario):
+                seen.setdefault(self._compat_key(r), r)
+                strategy = self._resolve_override(r.strategy)
+                if self.memo is not None and \
+                        strategy.bind(r.fit.num_accels).\
+                        supports_init_population:
+                    # memo near-hits dispatch through the warm-input
+                    # executable: precompile it too (zero-jitter dummy
+                    # seed; warmup results are discarded)
+                    bound = strategy.bind(r.fit.num_accels)
+                    G = r.fit.group_size
+                    w = WarmStart(
+                        accel=np.zeros((bound.ask_size, G), np.int32),
+                        prio=np.full((bound.ask_size, G), 0.5, np.float32),
+                        jitter=np.float32(0.0))
+                    rw = dataclasses.replace(r, warm=w)
+                    seen.setdefault(self._compat_key(rw), rw)
+
             for req in reps.values():
-                r = self.pool.analyze(req)
-                seen.setdefault(self._compat_key(r), r)
+                note(self.pool.analyze(req))
             for p in prepared:
-                r = self._prepared_ready(p)
-                seen.setdefault(self._compat_key(r), r)
+                note(self._prepared_ready(p))
             for key, ready in seen.items():
                 bucket = 1
                 while True:
@@ -502,9 +589,14 @@ class StreamingScheduler:
                           strategy: Union[SearchStrategy, str, None] = None
                           ) -> StreamResult:
         """Schedule ONE prepared scenario through the stream (the
-        ``serve.engine`` client path).  Bit-identical to a standalone
-        ``run_strategy``/``magma_search`` with the same seed, budget and
-        (device-resident) strategy."""
+        ``serve.engine`` client path).  Without a memo, bit-identical to
+        a standalone ``run_strategy``/``magma_search`` with the same
+        seed, budget and (device-resident) strategy.  With a memo, a
+        re-seen scenario replays the service's previous answer and a
+        first-seen one may be warm-seeded from a stored population —
+        same quality, but only cold-solved (never-warm-seeded) scenarios
+        keep the standalone bit-identity (see
+        ``repro.memo.ScheduleMemo.lookup``)."""
         return self.run(prepared=[PreparedScenario(
             fit=fit, seed=seed, budget=budget, strategy=strategy)])[0]
 
