@@ -19,6 +19,12 @@ constantly.  The memo turns every solved row into reusable knowledge:
               key), so a warm-seeded search differs from a cold one only
               in its initial population — Section V-C generalized from
               four task-type strings to nearest-fingerprint lookup.
+              Donation is *guarded*: a nearest donor whose feature
+              distance exceeds ``max_donor_dist`` is rejected (cold init
+              instead), because a far donor's converged population can
+              trap the search in its own basin and make the seeded run
+              WORSE than cold (measured on cross-group Mix transfer —
+              see ``warm_start``).
 
 One ``ScheduleMemo`` may back many clients at once (``M3E.search``, the
 stream's admission stage, ``run_sweep`` recording): the store is locked,
@@ -106,16 +112,29 @@ class ScheduleMemo:
 
     ``jitter`` is the warm-start priority noise scale (Section V-C:
     re-randomize the low bits to preserve diversity); ``near=False``
-    disables warm transfer (exact replay only).
+    disables warm transfer (exact replay only).  ``max_donor_dist`` is
+    the donor-distance guard (``None`` disables it — any stored
+    population donates, the pre-guard behavior).
     """
 
+    #: Default donor-distance guard, calibrated on S2 Mix task groups
+    #: (G=24, feature dim 8A+2): every measured donor at d <= 2.1 left a
+    #: short-budget warm search no worse than cold (warm/cold fitness
+    #: ratio >= 1.00 across seeds), while donors at d >= 3.7 (cross-group
+    #: transfer, especially with a BW shift) dragged it as low as 0.13x
+    #: cold.  3.0 splits the two regimes with margin on both sides.
+    MAX_DONOR_DIST = 3.0
+
     def __init__(self, store: Optional[MemoStore] = None,
-                 jitter: float = 0.02, near: bool = True):
+                 jitter: float = 0.02, near: bool = True,
+                 max_donor_dist: Optional[float] = MAX_DONOR_DIST):
         # NOT `store or MemoStore()`: an empty MemoStore is len()==0 and
         # would be silently replaced by a fresh in-memory one
         self.store = store if store is not None else MemoStore()
         self.jitter = float(jitter)
         self.near = bool(near)
+        self.max_donor_dist = (None if max_donor_dist is None
+                               else float(max_donor_dist))
         self.stats = MemoStats()
         self._lock = threading.Lock()
 
@@ -190,7 +209,12 @@ class ScheduleMemo:
         Only strategies that accept an ``init_population``
         (``supports_init_population``) can be seeded; candidates are the
         family's stored records that carry a converged population, ranked
-        by L2 distance between table feature vectors.  The population is
+        by L2 distance between table feature vectors.  The nearest donor
+        must also pass the ``max_donor_dist`` guard: beyond it (or when
+        the candidate never saw tables and has no features) transfer is
+        refused and the caller falls back to cold init — a guarded warm
+        start is never worse than cold, whereas an unguarded far donor
+        (cross-group Mix transfer) measurably is.  The population is
         resized host-side to the strategy's ask size (row tiling — a
         deterministic reshape); jittering happens device-side in
         ``init``.  ``exclude`` skips one fingerprint (a row should not
@@ -214,6 +238,9 @@ class ScheduleMemo:
                  else np.inf)     # population-only record (no tables seen)
             if best is None or d <= best_d:
                 best, best_d = r, d
+        if self.max_donor_dist is not None and \
+                not best_d <= self.max_donor_dist:
+            return None            # guard: too far to trust — cold init
         with self._lock:
             self.stats.near_hits += 1
         P = strategy.ask_size

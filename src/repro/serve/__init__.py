@@ -1,5 +1,6 @@
 from repro.serve.engine import (
-    ServeJob, Submesh, Tenant, MultiTenantEngine, default_submeshes)
+    ServeJob, Submesh, Tenant, TenantSLO, MultiTenantEngine,
+    default_submeshes)
 
-__all__ = ["ServeJob", "Submesh", "Tenant", "MultiTenantEngine",
-           "default_submeshes"]
+__all__ = ["ServeJob", "Submesh", "Tenant", "TenantSLO",
+           "MultiTenantEngine", "default_submeshes"]

@@ -70,12 +70,35 @@ def default_submeshes() -> List[Submesh]:
             Submesh("tp4_c", 4), Submesh("tp4_d", 4)]
 
 
+@dataclasses.dataclass(frozen=True)
+class TenantSLO:
+    """Per-tenant service-level objective, forwarded to the stream's
+    SLO-aware admission: ``priority`` is one of
+    ``repro.stream.workloads.PRIORITY_CLASSES`` and ``deadline_s`` the
+    scheduling-latency budget (admission -> schedule routed).  A job
+    group spanning several tenants is scheduled at the STRICTEST member
+    SLO — an urgent tenant's jobs must not wait because a batch tenant
+    shares the group."""
+    priority: str = "normal"
+    deadline_s: Optional[float] = None
+
+    def __post_init__(self):
+        from repro.stream.workloads import PRIORITY_CLASSES
+        if self.priority not in PRIORITY_CLASSES:
+            raise ValueError(f"unknown priority {self.priority!r}; "
+                             f"expected one of {PRIORITY_CLASSES}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0 or None, got "
+                             f"{self.deadline_s}")
+
+
 @dataclasses.dataclass
 class Tenant:
     name: str
     cfg: ModelConfig
     params: object                  # value tree
     model: object = None
+    slo: Optional[TenantSLO] = None  # None: normal priority, no deadline
 
     def __post_init__(self):
         if self.model is None:
@@ -197,6 +220,19 @@ class MultiTenantEngine:
                 done += w
         return jobs
 
+    def slo_for(self, jobs: Sequence[ServeJob]) -> TenantSLO:
+        """The strictest SLO across the tenants appearing in ``jobs``:
+        highest priority class, smallest deadline.  Tenants without an
+        SLO contribute the (normal, no-deadline) default."""
+        from repro.stream.workloads import PRIORITY_CLASSES
+        slos = [self.tenants[j.tenant].slo or TenantSLO()
+                for j in jobs] or [TenantSLO()]
+        priority = min((s.priority for s in slos),
+                       key=PRIORITY_CLASSES.index)
+        deadlines = [s.deadline_s for s in slos if s.deadline_s is not None]
+        return TenantSLO(priority=priority,
+                         deadline_s=min(deadlines) if deadlines else None)
+
     # -- analysis + scheduling --------------------------------------------------
     def analyze(self, jobs: Sequence[ServeJob]):
         """Job-analysis table over (job x submesh) from the TPU cost model."""
@@ -236,8 +272,10 @@ class MultiTenantEngine:
         strategy = get_strategy(method)
         stream_res = None
         if strategy.device_resident:
+            slo = self.slo_for(jobs)
             stream_res = self.stream_service().schedule_prepared(
-                fit, seed=self.seed, budget=self.budget, strategy=strategy)
+                fit, seed=self.seed, budget=self.budget, strategy=strategy,
+                priority=slo.priority, deadline_s=slo.deadline_s)
             res = stream_res.to_search_result()
         else:
             res: SearchResult = run_strategy(strategy, fit,

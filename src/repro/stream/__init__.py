@@ -9,18 +9,20 @@ Every streamed schedule is bit-identical to a standalone
 ``magma_search``/``run_sweep`` row — the pipeline only changes *when*
 schedules are computed, never *what* they are.
 """
-from repro.stream.workloads import (ARRIVAL_KINDS, ScenarioRequest,
-                                    TraceConfig, generate_trace)
+from repro.stream.workloads import (ARRIVAL_KINDS, PRIORITY_CLASSES,
+                                    ScenarioRequest, TraceConfig,
+                                    generate_trace)
 from repro.stream.analysis import AnalysisPool, ReadyScenario, analyze_serial
 from repro.stream.metrics import (StreamMetrics, compute_metrics,
-                                  interval_union_s)
+                                  interval_union_s, p99_s)
 from repro.stream.service import (PreparedScenario, StreamConfig,
                                   StreamResult, StreamingScheduler)
 
 __all__ = [
-    "ARRIVAL_KINDS", "ScenarioRequest", "TraceConfig", "generate_trace",
+    "ARRIVAL_KINDS", "PRIORITY_CLASSES", "ScenarioRequest",
+    "TraceConfig", "generate_trace",
     "AnalysisPool", "ReadyScenario", "analyze_serial",
-    "StreamMetrics", "compute_metrics", "interval_union_s",
+    "StreamMetrics", "compute_metrics", "interval_union_s", "p99_s",
     "PreparedScenario", "StreamConfig", "StreamResult",
     "StreamingScheduler",
 ]

@@ -82,6 +82,14 @@ class ReadyScenario:
     warm: object = None          # strategies.WarmStart memo near-hit seed
                                  # (set at admission; warm rows batch
                                  # separately from cold ones)
+    anytime: bool = False        # short-budget interim twin of a
+                                 # deadline-carrying scenario (anytime
+                                 # mode): routed to the caller, budget
+                                 # overridden to the anytime budget
+    silent: bool = False         # background full-budget refinement twin:
+                                 # recorded to the memo, never routed —
+                                 # ranks below every priority class so it
+                                 # soaks only device slack
 
     @property
     def analysis_wall_s(self) -> float:

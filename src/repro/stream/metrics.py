@@ -8,6 +8,15 @@ exists to shrink).  Device busy time is measured as the union of
 [dispatch, routed] intervals of all device batches: batches may overlap
 (up to ``max_inflight`` are enqueued at once and XLA executes them
 back-to-back), so summing walls would double-count.
+
+SLO accounting: requests may carry a priority class and a deadline
+(``ScenarioRequest.priority`` / ``deadline_s``); the metrics report the
+attainment fraction (share of deadline-carrying schedules routed within
+their deadline), the miss count, and per-class p99 latency.  p99 uses
+``np.percentile(..., method="higher")`` — linear interpolation would
+read *below* the observed worst latency whenever there are fewer than
+~100 samples (exactly the ``--quick`` bench regime), which is the wrong
+direction to be optimistic in for a tail metric.
 """
 from __future__ import annotations
 
@@ -15,6 +24,8 @@ import dataclasses
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
+
+from repro.stream.workloads import PRIORITY_CLASSES
 
 
 def interval_union_s(intervals: Sequence[Tuple[float, float]]) -> float:
@@ -26,6 +37,16 @@ def interval_union_s(intervals: Sequence[Tuple[float, float]]) -> float:
         total += end - max(start, last_end)
         last_end = end
     return total
+
+
+def p99_s(lats) -> float:
+    """Tail-conservative p99: the smallest OBSERVED latency >= the 99th
+    percentile (``method="higher"``), never an interpolated value below
+    the worst sample.  0.0 on empty input."""
+    lats = np.asarray(lats, dtype=np.float64)
+    if not len(lats):
+        return 0.0
+    return float(np.percentile(lats, 99, method="higher"))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,19 +62,38 @@ class StreamMetrics:
     device_idle_frac: float         # 1 - device_busy/wall
     num_batches: int
     mean_batch_fill: float          # real rows / padded rows, averaged
-    # schedule-memo reuse (0 when the service runs without a memo):
-    # exact hits are answered from the store with NO device dispatch;
-    # warm hits went to the device seeded from a stored population
-    memo_exact_hits: int = 0
-    memo_warm_hits: int = 0
+    # schedule-memo reuse (0 when the service runs without a memo).
+    # DISJOINT counters: an exact hit whose stored row happens to be
+    # warm-seeded counts as exact only, so
+    # exact + warm + cold == num_scenarios always holds
+    memo_exact_hits: int = 0        # answered from the store, NO dispatch
+    memo_warm_hits: int = 0         # searched, seeded from a stored
+                                    # population (and not an exact hit)
+    # SLO accounting (vacuous defaults when no request carries one)
+    slo_attainment: float = 1.0     # fraction of deadline-carrying
+                                    # schedules routed within deadline
+                                    # (1.0 when none carry a deadline)
+    deadline_misses: int = 0
+    num_with_deadline: int = 0
+    latency_p99_urgent_s: float = 0.0    # per-class p99 (0.0 when the
+    latency_p99_normal_s: float = 0.0    # class has no results)
+    latency_p99_batch_s: float = 0.0
+    # anytime mode: interim schedules returned to callers, background
+    # refinements recorded to the memo (never routed)
+    anytime_interims: int = 0
+    anytime_refinements: int = 0
 
     def summary(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
 
-def compute_metrics(results, batches, wall_s: float) -> StreamMetrics:
+def compute_metrics(results, batches, wall_s: float,
+                    refinements: int = 0) -> StreamMetrics:
     """Aggregate routed :class:`~repro.stream.service.StreamResult`s and
-    per-batch dispatch records into service metrics."""
+    per-batch dispatch records into service metrics.  ``refinements``
+    counts the anytime background rows that were recorded but (by
+    design) never routed — they are device work the results list cannot
+    show."""
     lats = np.array([r.latency_s for r in results], dtype=np.float64)
     dev = interval_union_s([(b.dispatch_s, b.done_s) for b in batches])
     ana = interval_union_s(
@@ -61,20 +101,45 @@ def compute_metrics(results, batches, wall_s: float) -> StreamMetrics:
          if r.ready_s > r.analysis_start_s])
     fills = [b.rows / max(b.padded_rows, 1) for b in batches]
     wall = max(wall_s, 1e-12)
+
+    by_class: Dict[str, List[float]] = {c: [] for c in PRIORITY_CLASSES}
+    misses, with_deadline = 0, 0
+    for r in results:
+        req = r.request
+        by_class[getattr(req, "priority", "normal")].append(r.latency_s)
+        deadline = getattr(req, "deadline_s", None)
+        if deadline is not None:
+            with_deadline += 1
+            misses += r.latency_s > deadline
+
     return StreamMetrics(
         num_scenarios=len(results),
         wall_s=wall_s,
         scenarios_per_sec=len(results) / wall,
         latency_p50_s=float(np.percentile(lats, 50)) if len(lats) else 0.0,
-        latency_p99_s=float(np.percentile(lats, 99)) if len(lats) else 0.0,
+        latency_p99_s=p99_s(lats),
         latency_mean_s=float(lats.mean()) if len(lats) else 0.0,
         analysis_busy_s=ana,
         device_busy_s=dev,
         device_idle_frac=max(0.0, 1.0 - dev / wall),
         num_batches=len(batches),
         mean_batch_fill=float(np.mean(fills)) if fills else 0.0,
+        # exact wins: a replayed row whose stored solve was warm-seeded
+        # is an exact hit, not a warm hit (the flags stay on the result
+        # for provenance; the counters partition the scenarios)
         memo_exact_hits=sum(bool(getattr(r, "memo_exact", False))
                             for r in results),
         memo_warm_hits=sum(bool(getattr(r, "warm_seeded", False))
+                           and not getattr(r, "memo_exact", False)
                            for r in results),
+        slo_attainment=(1.0 - misses / with_deadline
+                        if with_deadline else 1.0),
+        deadline_misses=int(misses),
+        num_with_deadline=int(with_deadline),
+        latency_p99_urgent_s=p99_s(by_class["urgent"]),
+        latency_p99_normal_s=p99_s(by_class["normal"]),
+        latency_p99_batch_s=p99_s(by_class["batch"]),
+        anytime_interims=sum(bool(getattr(r, "anytime_interim", False))
+                             for r in results),
+        anytime_refinements=int(refinements),
     )

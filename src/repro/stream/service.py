@@ -11,7 +11,12 @@ Stages (each overlapping the others):
                   everything a compiled executable is specialized on),
                   padded to a power-of-two bucket, and dispatched through
                   the SAME compiled row executables ``run_sweep`` uses
-                  (``repro.core.sweep.row_executable``)
+                  (``repro.core.sweep.row_executable``).  SLO-aware
+                  (default): queues dispatch in (priority class, slack)
+                  order, a held partial flushes early when an urgent
+                  member's slack runs out, and anytime mode splits
+                  deadline-carrying scenarios into a fast interim row
+                  plus a silent memo-bound refinement
   device          up to ``max_inflight`` batches enqueued at once — JAX
                   dispatch is async, so batch i+1's transfer and launch
                   overlap batch i's compute (the sweep's double-buffering,
@@ -78,6 +83,29 @@ class StreamConfig:
                       compatibility keys those analyses never will — once
                       the oldest held scenario has waited this long it
                       dispatches bucket-padded regardless
+    slo_aware         order admission by (priority class, slack) instead
+                      of deepest-queue-first, and flush a held partial
+                      early when an urgent member's slack runs out (the
+                      *hold* is preempted, never in-flight device work).
+                      With no priorities/deadlines on the trace the
+                      ordering degenerates to deepest-first, so the
+                      default changes nothing for SLO-free workloads;
+                      False is the priority-blind baseline the perf
+                      benchmark compares against
+    slo_margin_s      an urgent member whose slack (arrival + deadline -
+                      now) has shrunk to this margin flushes its held
+                      partial immediately
+    anytime_budget    anytime mode (needs a memo and slo_aware): a
+                      deadline-carrying scenario missing the memo
+                      dispatches TWICE — a short-budget interim row at
+                      this budget, routed to the caller fast, and a
+                      silent full-budget refinement that lands in the
+                      memo (idempotent record), so the next arrival of
+                      the same scenario replays the refined schedule for
+                      free.  Both rows are ordinary compiled-executable
+                      rows: the interim is bit-identical to a standalone
+                      search at the anytime budget, the refinement to
+                      one at the full budget.  None disables the split
     """
     batch_rows: int = 8
     analysis_workers: int = 2
@@ -85,6 +113,9 @@ class StreamConfig:
     max_devices: Optional[int] = None
     realtime: bool = False
     max_hold_s: float = 0.25
+    slo_aware: bool = True
+    slo_margin_s: float = 0.05
+    anytime_budget: Optional[int] = None
 
     def __post_init__(self):
         for field in ("batch_rows", "analysis_workers", "max_inflight"):
@@ -97,6 +128,17 @@ class StreamConfig:
         if self.max_hold_s < 0:
             raise ValueError(f"max_hold_s must be >= 0, got "
                              f"{self.max_hold_s}")
+        if self.slo_margin_s < 0:
+            raise ValueError(f"slo_margin_s must be >= 0, got "
+                             f"{self.slo_margin_s}")
+        if self.anytime_budget is not None:
+            if self.anytime_budget < 1:
+                raise ValueError(f"anytime_budget must be >= 1 or None, "
+                                 f"got {self.anytime_budget}")
+            if not self.slo_aware:
+                raise ValueError("anytime_budget needs slo_aware=True: "
+                                 "the interim/refinement split is part of "
+                                 "deadline-aware admission")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +151,8 @@ class PreparedScenario:
     uid: int = 0
     budget: Optional[int] = None     # None: the service's default
     strategy: Union[SearchStrategy, str, None] = None  # None: the service's
+    priority: str = "normal"         # SLO class (workloads.PRIORITY_CLASSES)
+    deadline_s: Optional[float] = None   # SLO latency budget from admission
 
 
 @dataclasses.dataclass
@@ -129,13 +173,28 @@ class StreamResult:
     # schedule-memo provenance: an exact hit was replayed from the store
     # (no device dispatch — dispatch_s == done_s == the admission
     # instant); a warm-seeded row searched from a transferred population
+    # (on an exact hit the flag says how the STORED row was solved)
     memo_exact: bool = False
     warm_seeded: bool = False
+    # the sampling budget this schedule was actually computed at — the
+    # request's budget, except for an anytime interim (the short anytime
+    # budget) or an exact hit of a refined record (the refined budget)
+    budget: int = 0
+    anytime_interim: bool = False
 
     @property
     def latency_s(self) -> float:
         """Schedule latency: arrival -> schedule routed back."""
         return self.done_s - self.arrival_s
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """Whether the schedule was routed within its SLO deadline
+        (None when the request carries no deadline)."""
+        deadline = getattr(self.request, "deadline_s", None)
+        if deadline is None:
+            return None
+        return self.latency_s <= deadline
 
     def to_search_result(self) -> SearchResult:
         """The row as the ``SearchResult`` a standalone search returns."""
@@ -200,6 +259,11 @@ class StreamingScheduler:
         # row is recorded back (with its converged population), so a
         # long-lived service computes most schedules once.
         self.memo = memo
+        if self.stream.anytime_budget is not None and memo is None:
+            raise ValueError(
+                "anytime mode needs a memo: the background refinement's "
+                "whole purpose is landing in the store for the next "
+                "arrival — without one its result would be discarded")
         self._strategy = _resolve_strategy(strategy, cfg)
         if not self._strategy.device_resident:
             raise ValueError(
@@ -211,6 +275,8 @@ class StreamingScheduler:
                                  clock=self._clock)
         self.last_metrics: Optional[StreamMetrics] = None
         self.last_batches: List[_BatchRecord] = []
+        self._refined = 0            # anytime refinements routed-less
+
         # one run at a time: the clock zero, batch records, and metrics
         # are per-run state, so concurrent clients (several engines
         # sharing one service) serialize here rather than corrupt them
@@ -247,6 +313,64 @@ class StreamingScheduler:
         while b < n:
             b *= 2
         return min(b, self.stream.batch_rows)
+
+    # -- SLO ordering ---------------------------------------------------------
+    # class rank: urgent < normal < batch < silent refinement (anytime
+    # background rows soak only device slack)
+    _PRIO_RANK = {"urgent": 0, "normal": 1, "batch": 2}
+    _SILENT_RANK = 3
+
+    def _rank(self, m: ReadyScenario) -> int:
+        if m.silent:
+            return self._SILENT_RANK
+        return self._PRIO_RANK.get(
+            getattr(m.request, "priority", "normal"), 1)
+
+    def _slack(self, m: ReadyScenario, now: float) -> float:
+        """Seconds until the member's SLO deadline (inf without one)."""
+        deadline = getattr(m.request, "deadline_s", None)
+        if deadline is None or m.silent:
+            return np.inf
+        return m.request.arrival_s + deadline - now
+
+    def _queue_score(self, q, now: float) -> Tuple[int, float, int]:
+        """Admission order among non-empty queues: most urgent class
+        first, then least slack, then deepest (numbers only — compat
+        keys themselves don't order)."""
+        return (min(self._rank(m) for m in q),
+                min(self._slack(m, now) for m in q),
+                -len(q))
+
+    def _must_flush(self, q, now: float) -> bool:
+        """Whether a held partial goes out NOW: its oldest member has
+        waited past max_hold_s (liveness, pre-SLO behavior), or an
+        urgent member's slack is down to the margin — the hold is
+        preempted (in-flight device work never is)."""
+        if now - min(m.ready_s for m in q) > self.stream.max_hold_s:
+            return True
+        return any(self._rank(m) == 0
+                   and self._slack(m, now) <= self.stream.slo_margin_s
+                   for m in q)
+
+    def _take_members(self, q) -> List[ReadyScenario]:
+        """Pull up to batch_rows members.  SLO-aware: the most urgent
+        (class rank, absolute deadline, uid) members first; blind: FIFO."""
+        k = min(len(q), self.stream.batch_rows)
+        if not self.stream.slo_aware:
+            return [q.popleft() for _ in range(k)]
+
+        def member_key(m: ReadyScenario):
+            deadline = getattr(m.request, "deadline_s", None)
+            absolute = (np.inf if deadline is None or m.silent
+                        else m.request.arrival_s + deadline)
+            return (self._rank(m), absolute, m.request.uid)
+
+        take = sorted(q, key=member_key)[:k]
+        taken = {id(m) for m in take}
+        rest = [m for m in q if id(m) not in taken]
+        q.clear()
+        q.extend(rest)
+        return take
 
     def _keep_population(self, strategy: SearchStrategy) -> bool:
         """Whether dispatches emit converged populations (memo attached
@@ -301,7 +425,8 @@ class StreamingScheduler:
             uid=p.uid, arrival_s=now, mix="<prepared>",
             setting="<prepared>", bw_gb=p.fit.bw_sys / 1024 ** 3,
             group_size=p.fit.group_size, seed=p.seed,
-            objective=p.fit.objective, budget=p.budget)
+            objective=p.fit.objective, budget=p.budget,
+            priority=p.priority, deadline_s=p.deadline_s)
         return ReadyScenario(request=req, fit=p.fit, analysis_start_s=now,
                              ready_s=now,
                              strategy=self._resolve_override(p.strategy))
@@ -317,18 +442,26 @@ class StreamingScheduler:
         generations, _ = plan_generations(budget, strategy.ask_size)
         n_samples = strategy.ask_size * generations
         for i, m in enumerate(inf.members):
-            results.append(StreamResult(
-                request=m.request,
-                best_fitness=float(bf[i]),
-                best_accel=ba[i], best_prio=bp[i], history_best=hist[i],
-                n_samples=n_samples,
-                arrival_s=m.request.arrival_s,
-                analysis_start_s=m.analysis_start_s,
-                ready_s=m.ready_s,
-                dispatch_s=inf.dispatch_s,
-                done_s=done,
-                warm_seeded=is_warm,
-            ))
+            if m.silent:
+                # anytime background refinement: recorded below, never
+                # routed — the caller already has (or will get) the
+                # interim schedule
+                self._refined += 1
+            else:
+                results.append(StreamResult(
+                    request=m.request,
+                    best_fitness=float(bf[i]),
+                    best_accel=ba[i], best_prio=bp[i], history_best=hist[i],
+                    n_samples=n_samples,
+                    arrival_s=m.request.arrival_s,
+                    analysis_start_s=m.analysis_start_s,
+                    ready_s=m.ready_s,
+                    dispatch_s=inf.dispatch_s,
+                    done_s=done,
+                    warm_seeded=is_warm,
+                    budget=budget,
+                    anytime_interim=m.anytime,
+                ))
             if self.memo is not None:
                 self.memo.record(
                     m.fit, strategy, budget, m.request.seed,
@@ -358,6 +491,7 @@ class StreamingScheduler:
     def _run(self, requests, prepared) -> List[StreamResult]:
         self._t0 = time.perf_counter()
         self.last_batches = []
+        self._refined = 0
         realtime = self.stream.realtime
 
         to_submit = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
@@ -367,9 +501,9 @@ class StreamingScheduler:
         results: List[StreamResult] = []
 
         def admit(ready: ReadyScenario):
+            budget = ready.request.budget or self.budget
             if self.memo is not None:
                 strategy = self._resolve_override(ready.strategy)
-                budget = ready.request.budget or self.budget
                 hit = self.memo.lookup(ready.fit, strategy, budget,
                                        ready.request.seed)
                 if hit is not None:
@@ -389,12 +523,33 @@ class StreamingScheduler:
                         ready_s=ready.ready_s,
                         dispatch_s=now, done_s=now,
                         memo_exact=True,
+                        # provenance, not a second hit: the counters
+                        # treat exact and warm as disjoint (exact wins)
+                        warm_seeded=hit.warm_seeded,
+                        budget=budget,
                     ))
                     return
                 # miss: seed from the nearest stored scenario of the
-                # same transfer family, when one exists
+                # same transfer family, when one exists (the memo's
+                # donor-distance guard refuses far donors — cold init)
                 ready.warm = self.memo.warm_start(
                     ready.fit, strategy, family=ready.request.mix)
+            anytime = self.stream.anytime_budget
+            if anytime is not None and anytime < budget \
+                    and ready.request.deadline_s is not None:
+                # anytime split: the caller gets a short-budget interim
+                # schedule fast; a silent full-budget twin refines in
+                # the background and lands in the memo, upgrading the
+                # NEXT arrival of this scenario to an exact replay of
+                # the refined schedule
+                interim = dataclasses.replace(
+                    ready,
+                    request=dataclasses.replace(ready.request,
+                                                budget=anytime),
+                    anytime=True)
+                queues.setdefault(self._compat_key(interim),
+                                  deque()).append(interim)
+                ready.silent = True
             queues.setdefault(self._compat_key(ready), deque()).append(ready)
 
         for p in prepared:
@@ -428,29 +583,47 @@ class StreamingScheduler:
             # steals CPU from the very analyses that would fill it.  With
             # nothing being analyzed (stream draining, or sparse realtime
             # arrivals), partials go out bucket-padded rather than letting
-            # the device idle — and a partial whose oldest member has
-            # waited max_hold_s dispatches regardless, so a rare
-            # compatibility key cannot starve behind a sustained stream
-            # of other keys.  Deepest queue first so batches fill out.
+            # the device idle — and a partial that _must_flush (oldest
+            # member waited max_hold_s, or an urgent member's slack ran
+            # out) dispatches regardless, so a rare compatibility key
+            # cannot starve behind a sustained stream of other keys.
+            # SLO-aware: queues go out in (class rank, slack, -depth)
+            # order — batch work never delays an urgent schedule; blind
+            # (slo_aware=False): deepest queue first so batches fill out.
             while len(inflight) < self.stream.max_inflight:
                 ready_qs = [(len(q), k) for k, q in queues.items() if q]
                 if not ready_qs:
                     break
-                # key= so depth ties never compare the compat keys
-                # (strategies/None don't order)
-                depth, key = max(ready_qs, key=lambda x: x[0])
-                if depth < self.stream.batch_rows and futs:
-                    stale = [k for _, k in ready_qs
-                             if self._clock() - queues[k][0].ready_s
-                             > self.stream.max_hold_s]
-                    if not stale:
-                        break      # hold the partial: more is coming
-                    key = stale[0]
-                q = queues[key]
-                members = [q.popleft()
-                           for _ in range(min(len(q),
-                                              self.stream.batch_rows))]
-                inflight.append(self._dispatch(key, members))
+                now = self._clock()
+                key = None
+                if self.stream.slo_aware:
+                    # indices sorted on scores so ties never compare the
+                    # compat keys (strategies/None don't order)
+                    order = sorted(
+                        range(len(ready_qs)),
+                        key=lambda i: self._queue_score(
+                            queues[ready_qs[i][1]], now))
+                    for i in order:
+                        depth, k = ready_qs[i]
+                        if depth >= self.stream.batch_rows or not futs \
+                                or self._must_flush(queues[k], now):
+                            key = k
+                            break
+                else:
+                    depth, k = max(ready_qs, key=lambda x: x[0])
+                    if depth >= self.stream.batch_rows or not futs:
+                        key = k
+                    else:
+                        stale = [kk for _, kk in ready_qs
+                                 if now - min(m.ready_s
+                                              for m in queues[kk])
+                                 > self.stream.max_hold_s]
+                        if stale:
+                            key = stale[0]
+                if key is None:
+                    break          # hold the partials: more is coming
+                inflight.append(
+                    self._dispatch(key, self._take_members(queues[key])))
                 progressed = True
 
             # 4. route: block on the head batch when the pipeline is full
@@ -471,7 +644,8 @@ class StreamingScheduler:
 
         wall = self._clock()
         results.sort(key=lambda r: r.request.uid)
-        self.last_metrics = compute_metrics(results, self.last_batches, wall)
+        self.last_metrics = compute_metrics(results, self.last_batches, wall,
+                                            refinements=self._refined)
         return results
 
     def run_trace(self, trace: TraceConfig) -> List[StreamResult]:
@@ -495,13 +669,22 @@ class StreamingScheduler:
         with self._run_lock:
             # one representative per executable-relevant signature
             # (derivable without analysis), so warming a big trace costs
-            # a few analyses
+            # a few analyses.  Anytime mode adds the short-budget interim
+            # signature for every deadline-carrying request — interim
+            # rows must reuse precompiled executables like any other row
             reps: Dict[Tuple, ScenarioRequest] = {}
+            anytime = self.stream.anytime_budget
             for req in requests:
-                sig = (req.group_size,
-                       get_setting(req.setting).num_sub_accels,
-                       req.objective, req.budget or self.budget)
-                reps.setdefault(sig, req)
+                variants = [req]
+                if anytime is not None and req.deadline_s is not None \
+                        and anytime < (req.budget or self.budget):
+                    variants.append(
+                        dataclasses.replace(req, budget=anytime))
+                for rq in variants:
+                    sig = (rq.group_size,
+                           get_setting(rq.setting).num_sub_accels,
+                           rq.objective, rq.budget or self.budget)
+                    reps.setdefault(sig, rq)
             seen: Dict[Tuple, ReadyScenario] = {}
 
             def note(r: ReadyScenario):
@@ -555,6 +738,7 @@ class StreamingScheduler:
     def _run_serial(self, requests, shared_cache) -> List[StreamResult]:
         self._t0 = time.perf_counter()
         self.last_batches = []
+        self._refined = 0          # serial baseline: no anytime splits
         results: List[StreamResult] = []
 
         # every request is on hand when the batch starts (the same
@@ -581,12 +765,15 @@ class StreamingScheduler:
 
         wall = self._clock()
         results.sort(key=lambda r: r.request.uid)
-        self.last_metrics = compute_metrics(results, self.last_batches, wall)
+        self.last_metrics = compute_metrics(results, self.last_batches, wall,
+                                            refinements=self._refined)
         return results
 
     def schedule_prepared(self, fit: FitnessFn, seed: int = 0,
                           budget: Optional[int] = None,
-                          strategy: Union[SearchStrategy, str, None] = None
+                          strategy: Union[SearchStrategy, str, None] = None,
+                          priority: str = "normal",
+                          deadline_s: Optional[float] = None
                           ) -> StreamResult:
         """Schedule ONE prepared scenario through the stream (the
         ``serve.engine`` client path).  Without a memo, bit-identical to
@@ -596,9 +783,14 @@ class StreamingScheduler:
         first-seen one may be warm-seeded from a stored population —
         same quality, but only cold-solved (never-warm-seeded) scenarios
         keep the standalone bit-identity (see
-        ``repro.memo.ScheduleMemo.lookup``)."""
+        ``repro.memo.ScheduleMemo.lookup``).  ``priority``/``deadline_s``
+        are the caller's SLO (serve.engine passes its tenants'
+        strictest); under anytime mode a deadline-carrying first-seen
+        scenario returns the interim schedule while the full-budget
+        refinement lands in the memo."""
         return self.run(prepared=[PreparedScenario(
-            fit=fit, seed=seed, budget=budget, strategy=strategy)])[0]
+            fit=fit, seed=seed, budget=budget, strategy=strategy,
+            priority=priority, deadline_s=deadline_s)])[0]
 
     def close(self) -> None:
         self.pool.shutdown()

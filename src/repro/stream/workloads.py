@@ -32,6 +32,11 @@ import numpy as np
 
 ARRIVAL_KINDS = ("poisson", "bursty", "batch")
 
+#: SLO priority classes, most to least urgent.  Admission orders the
+#: ready queues by (class rank, slack); ``batch`` work never delays an
+#: ``urgent`` schedule.
+PRIORITY_CLASSES = ("urgent", "normal", "batch")
+
 
 @dataclasses.dataclass(frozen=True)
 class ScenarioRequest:
@@ -53,6 +58,19 @@ class ScenarioRequest:
                               # (Fig. 14): analysis searches candidate
                               # array shapes per (layer, sub) — the
                               # expensive-analysis serving case
+    priority: str = "normal"  # SLO class (PRIORITY_CLASSES)
+    deadline_s: Optional[float] = None   # SLO latency budget, relative to
+                              # arrival: the schedule should be routed by
+                              # arrival_s + deadline_s.  None: no deadline
+                              # (slack is infinite, only the class ranks)
+
+    def __post_init__(self):
+        if self.priority not in PRIORITY_CLASSES:
+            raise ValueError(f"unknown priority {self.priority!r}; "
+                             f"expected one of {PRIORITY_CLASSES}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0 or None, got "
+                             f"{self.deadline_s}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,6 +87,16 @@ class TraceConfig:
     objectives: Tuple[str, ...] = ("throughput",)
     batch_scale_max: int = 1            # draw batch_scale from [1, max]
     flexible: bool = False              # profile flexible PE arrays
+    priorities: Tuple[str, ...] = ("normal",)
+                                        # SLO classes drawn uniformly per
+                                        # request (repeat a class to
+                                        # weight it, e.g. ("urgent",
+                                        # "batch", "batch"))
+    slo_by_class: Tuple[Tuple[str, float], ...] = ()
+                                        # (class, deadline_s) pairs: the
+                                        # per-class SLO latency budget;
+                                        # classes absent here get no
+                                        # deadline
     seed: int = 0
 
     def __post_init__(self):
@@ -83,6 +111,21 @@ class TraceConfig:
         if self.batch_scale_max < 1:
             raise ValueError(f"batch_scale_max must be >= 1, got "
                              f"{self.batch_scale_max}")
+        if not self.priorities:
+            raise ValueError("priorities must name at least one class")
+        for p in self.priorities:
+            if p not in PRIORITY_CLASSES:
+                raise ValueError(f"unknown priority {p!r}; expected "
+                                 f"members of {PRIORITY_CLASSES}")
+        for entry in self.slo_by_class:
+            cls, dl = entry
+            if cls not in PRIORITY_CLASSES:
+                raise ValueError(f"slo_by_class names unknown class "
+                                 f"{cls!r}; expected members of "
+                                 f"{PRIORITY_CLASSES}")
+            if dl <= 0:
+                raise ValueError(f"slo_by_class deadline for {cls!r} "
+                                 f"must be > 0, got {dl}")
 
 
 def _arrival_times(cfg: TraceConfig, rng: np.random.Generator) -> np.ndarray:
@@ -117,8 +160,13 @@ def generate_trace(cfg: TraceConfig) -> List[ScenarioRequest]:
                              f"({', '.join(TASK_MODELS)})")
     rng = np.random.default_rng(cfg.seed)
     times = _arrival_times(cfg, rng)
+    deadline_for = dict(cfg.slo_by_class)
     reqs = []
     for uid in range(cfg.num_scenarios):
+        # single-class configs draw nothing extra, so every pre-SLO
+        # TraceConfig still generates its bit-identical pre-SLO trace
+        prio = (cfg.priorities[int(rng.integers(len(cfg.priorities)))]
+                if len(cfg.priorities) > 1 else cfg.priorities[0])
         reqs.append(ScenarioRequest(
             uid=uid,
             arrival_s=float(times[uid]),
@@ -131,5 +179,7 @@ def generate_trace(cfg: TraceConfig) -> List[ScenarioRequest]:
             objective=cfg.objectives[int(rng.integers(len(cfg.objectives)))],
             batch_scale=int(rng.integers(1, cfg.batch_scale_max + 1)),
             flexible=cfg.flexible,
+            priority=prio,
+            deadline_s=deadline_for.get(prio),
         ))
     return sorted(reqs, key=lambda r: (r.arrival_s, r.uid))

@@ -381,6 +381,103 @@ def test_zero_jitter_warm_start_is_pure_transfer():
 
 
 # ---------------------------------------------------------------------------
+# the donor-distance guard
+# ---------------------------------------------------------------------------
+def test_warm_start_donor_distance_gate():
+    """``max_donor_dist`` is a hard gate on the nearest donor: inside it
+    transfer proceeds, outside it ``warm_start`` returns None (cold
+    init), and ``None`` disables the guard entirely."""
+    memo = ScheduleMemo()
+    fit = _fitness(seed=0)
+    s = _strategy()
+    ref = run_strategy(s, fit, budget=BUDGET, seed=0, keep_population=True)
+    memo.record(fit, s, BUDGET, 0, ref, population=ref.final_population,
+                family="Light")
+    sib = _fitness(seed=7)                  # measured d ~= 1.1 from donor
+    d = float(np.linalg.norm(feature_vector(sib.params)
+                             - feature_vector(fit.params)))
+    assert d <= ScheduleMemo.MAX_DONOR_DIST
+    assert memo.warm_start(sib, s, family="Light") is not None
+    # same store, tighter gate: the identical donor is now refused, and
+    # the refusal is not counted as a near hit
+    tight = ScheduleMemo(memo.store, max_donor_dist=d / 2)
+    assert tight.warm_start(sib, s, family="Light") is None
+    assert tight.stats.near_hits == 0
+    # gate off: pre-guard behavior (any stored population donates)
+    off = ScheduleMemo(memo.store, max_donor_dist=None)
+    assert off.warm_start(sib, s, family="Light") is not None
+
+
+def test_donor_guard_rejects_featureless_records():
+    """A population-only record (never saw tables, no feature vector)
+    sits at d = inf: the guard refuses it, while ``max_donor_dist=None``
+    restores the legacy donate-anything behavior."""
+    s = _strategy().bind(3)
+    fit = _fitness(seed=3)
+    fam = family_key(fit.params, s, use_kernel=False,
+                     objective="throughput", family="NoFeat")
+    store = MemoStore()
+    store.put(MemoRecord(
+        fingerprint="featureless", family=fam,
+        arrays={"pop_accel": np.zeros((4, 12), dtype=np.int32),
+                "pop_prio": np.full((4, 12), 0.5, dtype=np.float32)},
+        meta={}))
+    assert ScheduleMemo(store).warm_start(
+        fit, _strategy(), family="NoFeat") is None
+    assert ScheduleMemo(store, max_donor_dist=None).warm_start(
+        fit, _strategy(), family="NoFeat") is not None
+
+
+def test_mix_cross_group_guarded_warm_never_worse_than_cold():
+    """THE case the guard exists for (PR-5 caveat, pinned): nearest-
+    fingerprint transfer across Mix task groups hands over a population
+    converged in the wrong basin, and the seeded short-budget search
+    lands measurably BELOW cold.  With the calibrated gate the far donor
+    is refused, so the service's warm path IS the cold path bit-for-bit
+    — guarded warm is never worse than cold.  A near donor (same group,
+    one BW step away) still transfers."""
+    G, BUD, SHORT = 24, 600, 240
+    strat = MagmaStrategy(MagmaConfig(population=30))
+    groups = build_task_groups("Mix", group_size=G, num_groups=4, seed=0)
+
+    def fit_for(g, bw):
+        return M3E(accel=get_setting("S2"), bw_sys=bw * GB).prepare(g)
+
+    donor = fit_for(groups[0], 16)
+    near = fit_for(groups[0], 8)            # measured d ~= 0.30
+    far = fit_for(groups[2], 1)             # measured d ~= 3.93
+    dv = feature_vector(donor.params)
+    d_near = float(np.linalg.norm(feature_vector(near.params) - dv))
+    d_far = float(np.linalg.norm(feature_vector(far.params) - dv))
+    # the calibrated threshold splits the two regimes
+    assert d_near <= ScheduleMemo.MAX_DONOR_DIST < d_far
+
+    memo = ScheduleMemo()
+    ref = run_strategy(strat, donor, budget=BUD, seed=0,
+                       keep_population=True)
+    memo.record(donor, strat, BUD, 0, ref,
+                population=ref.final_population, family="Mix")
+    # near donor transfers; the far one is refused -> cold init, so the
+    # guarded warm-path search IS the cold search
+    assert memo.warm_start(near, strat, family="Mix") is not None
+    guarded = memo.warm_start(far, strat, family="Mix")
+    assert guarded is None
+    cold = run_strategy(strat, far, budget=SHORT, seed=13)
+    same = run_strategy(strat, far, budget=SHORT, seed=13,
+                        init_population=guarded)
+    assert same.best_fitness == cold.best_fitness
+    np.testing.assert_array_equal(same.best_accel, cold.best_accel)
+    # and the donation the guard prevented really is harmful: ungated,
+    # the same donor drags this seed to ~0.35x the cold fitness
+    ws = ScheduleMemo(memo.store, max_donor_dist=None).warm_start(
+        far, strat, family="Mix")
+    assert ws is not None
+    harmed = run_strategy(strat, far, budget=SHORT, seed=13,
+                          init_population=ws)
+    assert harmed.best_fitness < cold.best_fitness
+
+
+# ---------------------------------------------------------------------------
 # the streaming service: hits bypass dispatch, misses get warm seeds
 # ---------------------------------------------------------------------------
 def test_stream_memo_exact_hits_no_dispatch():
@@ -412,12 +509,15 @@ def test_stream_memo_exact_hits_no_dispatch():
 
 def test_stream_warm_seed_matches_standalone_warm_run():
     """A streamed near-hit row == standalone run_strategy given the same
-    WarmStart — batching/padding change nothing, warm or cold."""
+    WarmStart — batching/padding change nothing, warm or cold.  (The
+    donor guard is disabled: these two trace scenarios sit ~4.9 apart in
+    feature space, past the calibrated threshold — this test is about
+    the warm PLUMBING, not donor quality; the guard has its own tests.)"""
     fit0 = analyze_serial(generate_trace(
         TraceConfig(num_scenarios=1, seed=4, **QUICK)))[0].fit
     s = _strategy()
     ref = run_strategy(s, fit0, budget=BUDGET, seed=0, keep_population=True)
-    memo = ScheduleMemo()
+    memo = ScheduleMemo(max_donor_dist=None)
     memo.record(fit0, s, BUDGET, 0, ref, population=ref.final_population,
                 family="<prepared>")
     svc = StreamingScheduler(strategy=s, budget=BUDGET, memo=memo)

@@ -8,7 +8,7 @@ from repro.configs import get_smoke_config
 from repro.models import module
 from repro.models.registry import get_model
 from repro.serve.engine import (MultiTenantEngine, Submesh, Tenant,
-                                default_submeshes, job_costs)
+                                TenantSLO, default_submeshes, job_costs)
 
 
 @pytest.fixture(scope="module")
@@ -40,6 +40,40 @@ def test_schedule_covers_all_jobs(engine):
     scheduled = sorted(uid for q in out["queues"] for uid in q)
     assert scheduled == sorted(j.uid for j in jobs)
     assert out["makespan_s"] > 0 and np.isfinite(out["makespan_s"])
+
+
+def test_tenant_slo_strictest_and_forwarded(engine):
+    """A job group is scheduled at the STRICTEST member tenant's SLO
+    (highest class, smallest deadline), and that SLO rides the prepared
+    scenario into the stream's admission."""
+    with pytest.raises(ValueError, match="priority"):
+        TenantSLO(priority="gold")
+    with pytest.raises(ValueError, match="deadline_s"):
+        TenantSLO(deadline_s=0.0)
+
+    names = list(engine.tenants)
+    jobs = engine.jobs_for_requests([(names[0], 64, 4), (names[1], 64, 4)])
+    # default: no tenant carries an SLO -> (normal, no deadline)
+    slo = engine.slo_for(jobs)
+    assert slo.priority == "normal" and slo.deadline_s is None
+    try:
+        engine.tenants[names[0]].slo = TenantSLO("batch", 9.0)
+        engine.tenants[names[1]].slo = TenantSLO("urgent", 2.5)
+        slo = engine.slo_for(jobs)
+        assert slo.priority == "urgent" and slo.deadline_s == 2.5
+        # a group touching only the batch tenant keeps that tenant's SLO
+        only = [j for j in jobs if j.tenant == names[0]]
+        slo0 = engine.slo_for(only)
+        assert slo0.priority == "batch" and slo0.deadline_s == 9.0
+        # the stream sees the strictest SLO on the scheduled request
+        sr = engine.schedule(jobs)["stream"]
+        assert sr is not None
+        assert sr.request.priority == "urgent"
+        assert sr.request.deadline_s == 2.5
+        assert sr.deadline_met is not None
+    finally:
+        for n in names:
+            engine.tenants[n].slo = None
 
 
 def test_magma_not_worse_than_naive_round_robin(engine):

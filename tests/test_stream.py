@@ -10,6 +10,7 @@ import subprocess
 import sys
 import textwrap
 import threading
+import types
 
 import numpy as np
 import pytest
@@ -19,9 +20,11 @@ from repro.core.magma import magma_search
 from repro.core.strategies import get_strategy, run_strategy
 from repro.core.sweep import run_sweep
 from repro.costmodel import get_setting
-from repro.stream import (AnalysisPool, PreparedScenario, ScenarioRequest,
-                          StreamConfig, StreamingScheduler, TraceConfig,
-                          analyze_serial, generate_trace, interval_union_s)
+from repro.memo import ScheduleMemo
+from repro.stream import (AnalysisPool, PreparedScenario, PRIORITY_CLASSES,
+                          ScenarioRequest, StreamConfig, StreamingScheduler,
+                          TraceConfig, analyze_serial, compute_metrics,
+                          generate_trace, interval_union_s, p99_s)
 from repro.workloads import build_task_groups
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -257,6 +260,279 @@ def test_realtime_replay_orders_arrivals():
 
 
 # ---------------------------------------------------------------------------
+# SLO-aware admission: deadlines, priority classes, anytime schedules
+# ---------------------------------------------------------------------------
+def _slo_req(uid, bw=16.0, mix="Light", group_size=12, seed=5,
+             priority="normal", deadline_s=None):
+    return ScenarioRequest(uid=uid, arrival_s=0.0, mix=mix, setting="S2",
+                           bw_gb=bw, group_size=group_size, seed=seed,
+                           priority=priority, deadline_s=deadline_s)
+
+
+def test_trace_priorities_and_deadlines():
+    cfg = TraceConfig(num_scenarios=24, seed=9,
+                      priorities=("urgent", "batch", "batch"),
+                      slo_by_class=(("urgent", 0.2), ("normal", 1.0)),
+                      **QUICK)
+    t1, t2 = generate_trace(cfg), generate_trace(cfg)
+    assert t1 == t2                       # SLO fields are deterministic too
+    assert {r.priority for r in t1} <= {"urgent", "batch"}
+    assert any(r.priority == "urgent" for r in t1)
+    for r in t1:
+        # deadline comes from the class's slo_by_class entry (or nothing)
+        assert r.deadline_s == (0.2 if r.priority == "urgent" else None)
+    # a single-class config draws nothing extra, so the scenario content
+    # (mixes/BWs/seeds) is identical whatever the one class is — pre-SLO
+    # traces replay bit-identically under the default ("normal",)
+    base = dict(num_scenarios=12, seed=4, **QUICK)
+    a = generate_trace(TraceConfig(priorities=("urgent",),
+                                   slo_by_class=(("urgent", 0.5),), **base))
+    b = generate_trace(TraceConfig(**base))
+    assert [(r.mix, r.bw_gb, r.seed, r.arrival_s) for r in a] == \
+        [(r.mix, r.bw_gb, r.seed, r.arrival_s) for r in b]
+
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError, match="priority"):
+        TraceConfig(priorities=("gold",))
+    with pytest.raises(ValueError, match="at least one"):
+        TraceConfig(priorities=())
+    with pytest.raises(ValueError, match="unknown class"):
+        TraceConfig(slo_by_class=(("gold", 1.0),))
+    with pytest.raises(ValueError, match="must be > 0"):
+        TraceConfig(slo_by_class=(("urgent", 0.0),))
+    with pytest.raises(ValueError, match="priority"):
+        _slo_req(0, priority="gold")
+    with pytest.raises(ValueError, match="deadline_s"):
+        _slo_req(0, deadline_s=-1.0)
+    with pytest.raises(ValueError, match="slo_margin_s"):
+        StreamConfig(slo_margin_s=-0.1)
+    with pytest.raises(ValueError, match="anytime_budget"):
+        StreamConfig(anytime_budget=0)
+    with pytest.raises(ValueError, match="slo_aware"):
+        StreamConfig(anytime_budget=100, slo_aware=False)
+    with pytest.raises(ValueError, match="memo"):
+        StreamingScheduler(budget=BUDGET,
+                           stream=StreamConfig(anytime_budget=100))
+
+
+def test_deadline_ordered_dispatch():
+    """All four scenarios are admitted upfront into ONE compatibility
+    queue; batch_rows=2 forces two dispatches, and SLO-aware member
+    selection must send the urgent pair (tightest absolute deadline
+    first) before normal before batch — while every schedule stays
+    bit-identical to its standalone run_sweep row."""
+    fits = [analyze_serial([_slo_req(i, bw=bw, seed=20 + i)])[0].fit
+            for i, bw in enumerate((1.0, 4.0, 8.0, 16.0))]
+    prepared = [
+        PreparedScenario(fit=fits[0], seed=20, uid=0, priority="batch"),
+        PreparedScenario(fit=fits[1], seed=21, uid=1, priority="normal"),
+        PreparedScenario(fit=fits[2], seed=22, uid=2, priority="urgent",
+                         deadline_s=10.0),
+        PreparedScenario(fit=fits[3], seed=23, uid=3, priority="urgent",
+                         deadline_s=5.0)]
+    svc = StreamingScheduler(budget=BUDGET,
+                             stream=StreamConfig(batch_rows=2))
+    results = svc.run(prepared=prepared)
+    by_uid = {r.request.uid for r in results}
+    assert by_uid == {0, 1, 2, 3}
+    r = {res.request.uid: res for res in results}
+    # the urgent pair went out in the first batch, batch-class last
+    assert all(b.rows == 2 for b in svc.last_batches)
+    assert max(r[2].dispatch_s, r[3].dispatch_s) \
+        <= min(r[0].dispatch_s, r[1].dispatch_s)
+    assert r[2].dispatch_s == r[3].dispatch_s      # same batch
+    # reordering changed WHEN, never WHAT
+    for res in results:
+        ref = run_sweep([prepared[res.request.uid].fit], budget=BUDGET,
+                        seeds=[res.request.seed])
+        assert res.best_fitness == ref.best_fitness[0, 0]
+        np.testing.assert_array_equal(res.best_accel, ref.best_accel[0, 0])
+        np.testing.assert_array_equal(res.history_best,
+                                      ref.history_best[0, 0])
+
+
+def test_urgent_flush_preempts_held_partial():
+    """While analyses are in flight, partials are normally HELD to fill
+    the batch; an urgent member whose slack is inside slo_margin_s
+    flushes the hold immediately (rows=1 dispatch).  The priority-blind
+    config holds the same partial until the analyses drain, so the
+    urgent schedule queues behind them."""
+    trace = [_slo_req(uid, bw=bw, seed=30 + uid)
+             for uid, bw in ((1, 1.0), (2, 16.0))]
+    fit = analyze_serial([_slo_req(0, bw=4.0, seed=29)])[0].fit
+    urgent = PreparedScenario(fit=fit, seed=29, uid=0, priority="urgent",
+                              deadline_s=1e-6)
+
+    svc = StreamingScheduler(
+        budget=BUDGET, stream=StreamConfig(batch_rows=4,
+                                           analysis_workers=1))
+    res = {r.request.uid: r for r in svc.run(trace, prepared=[urgent])}
+    first = min(svc.last_batches, key=lambda b: b.dispatch_s)
+    assert first.rows == 1                      # the flushed urgent partial
+    assert res[0].dispatch_s == first.dispatch_s
+    assert res[0].dispatch_s < min(res[1].dispatch_s, res[2].dispatch_s)
+    m = svc.last_metrics
+    assert m.num_with_deadline == 1
+    assert m.deadline_misses == 1               # a 1 us SLO is unmeetable
+    assert m.slo_attainment == 0.0
+    assert res[0].deadline_met is False
+    assert res[1].deadline_met is None          # no deadline attached
+
+    blind = StreamingScheduler(
+        budget=BUDGET, stream=StreamConfig(batch_rows=4,
+                                           analysis_workers=1,
+                                           slo_aware=False,
+                                           max_hold_s=30.0))
+    bres = {r.request.uid: r for r in blind.run(trace, prepared=[urgent])}
+    bfirst = min(blind.last_batches, key=lambda b: b.dispatch_s)
+    assert bfirst.rows == 3                     # held until analyses drained
+    # blind or aware, the urgent schedule itself is bit-identical
+    assert bres[0].best_fitness == res[0].best_fitness
+    np.testing.assert_array_equal(bres[0].best_accel, res[0].best_accel)
+
+
+def test_anytime_interim_then_refined():
+    """Anytime mode: a deadline-carrying miss returns a short-budget
+    interim schedule (bit-identical to a standalone search at the
+    anytime budget) while a silent full-budget twin lands in the memo
+    (bit-identical to a standalone search at the full budget); the next
+    arrival replays the refined schedule as an exact hit."""
+    ANYTIME = 60
+    fit = analyze_serial([_slo_req(0, seed=40)])[0].fit
+    strat = get_strategy("magma")
+    memo = ScheduleMemo(near=False)
+    svc = StreamingScheduler(
+        budget=BUDGET, memo=memo,
+        stream=StreamConfig(anytime_budget=ANYTIME))
+
+    res1 = svc.schedule_prepared(fit, seed=5, priority="urgent",
+                                 deadline_s=2.0)
+    assert res1.anytime_interim and res1.budget == ANYTIME
+    interim = run_strategy(strat, fit, budget=ANYTIME, seed=5)
+    assert res1.best_fitness == interim.best_fitness
+    np.testing.assert_array_equal(res1.best_accel, interim.best_accel)
+    np.testing.assert_array_equal(res1.history_best, interim.history_best)
+    m = svc.last_metrics
+    assert m.anytime_interims == 1 and m.anytime_refinements == 1
+
+    # the silent refinement is already in the memo at the FULL budget,
+    # bit-identical to the standalone full-budget search
+    refined = run_strategy(strat, fit, budget=BUDGET, seed=5)
+    hit = memo.lookup(fit, strat, BUDGET, 5)
+    assert hit is not None and not hit.warm_seeded
+    assert hit.best_fitness == refined.best_fitness
+    np.testing.assert_array_equal(hit.best_accel, refined.best_accel)
+
+    # second arrival: exact replay of the refined schedule, no dispatch
+    res2 = svc.schedule_prepared(fit, seed=5, priority="urgent",
+                                 deadline_s=2.0)
+    assert res2.memo_exact and res2.budget == BUDGET
+    assert not res2.anytime_interim
+    assert res2.best_fitness == refined.best_fitness
+    m2 = svc.last_metrics
+    assert m2.num_batches == 0
+    assert m2.anytime_interims == 0 and m2.anytime_refinements == 0
+
+    # no deadline -> no split: one full-budget dispatch, no interim
+    res3 = svc.schedule_prepared(fit, seed=7)
+    assert not res3.anytime_interim and res3.budget == BUDGET
+    assert res3.best_fitness == run_strategy(strat, fit, budget=BUDGET,
+                                             seed=7).best_fitness
+
+
+def test_memo_counters_are_disjoint():
+    """The metrics partition scenarios: exact + warm + cold ==
+    num_scenarios, with exact WINNING on a replayed row that was
+    originally warm-seeded (the flags keep the provenance, the counters
+    never double-count)."""
+    ra = _slo_req(0, bw=16.0, seed=50)            # Light @ 16 GB/s
+    rb = _slo_req(1, bw=8.0, seed=51)             # near sibling (d ~ 0.30)
+    rh = _slo_req(2, mix="Heavy", group_size=10, seed=52)  # other family
+    memo = ScheduleMemo()
+    svc = StreamingScheduler(budget=BUDGET, memo=memo,
+                             stream=StreamConfig(batch_rows=4))
+
+    svc.run([ra])                                 # pass 1: cold, records pop
+    m1 = svc.last_metrics
+    assert m1.memo_exact_hits == 0 and m1.memo_warm_hits == 0
+
+    res = {r.request.uid: r for r in svc.run([ra, rb, rh])}
+    m2 = svc.last_metrics
+    assert res[0].memo_exact and not res[0].warm_seeded   # replayed cold row
+    assert res[1].warm_seeded and not res[1].memo_exact   # seeded from ra
+    assert not res[2].memo_exact and not res[2].warm_seeded  # cold: no donor
+    cold = sum(not r.memo_exact and not r.warm_seeded for r in res.values())
+    assert m2.memo_exact_hits == 1 and m2.memo_warm_hits == 1 and cold == 1
+    assert m2.memo_exact_hits + m2.memo_warm_hits + cold == m2.num_scenarios
+
+    # replay of the warm-seeded row: exact wins, warm stays as provenance
+    res3 = svc.run([rb])[0]
+    m3 = svc.last_metrics
+    assert res3.memo_exact and res3.warm_seeded
+    assert m3.memo_exact_hits == 1 and m3.memo_warm_hits == 0
+    assert res3.best_fitness == res[1].best_fitness
+    np.testing.assert_array_equal(res3.best_accel, res[1].best_accel)
+
+
+def test_p99_higher_and_slo_accounting():
+    """p99 is tail-conservative: with 10 samples it reads the OBSERVED
+    maximum, where linear interpolation would read below it."""
+    lats = [(i + 1) / 10 for i in range(10)]      # 0.1 .. 1.0
+    assert p99_s(lats) == 1.0
+    assert float(np.percentile(lats, 99)) < 1.0   # what "linear" would say
+    assert p99_s([]) == 0.0
+
+    def fake(i, lat, prio, deadline):
+        req = types.SimpleNamespace(priority=prio, deadline_s=deadline)
+        return types.SimpleNamespace(
+            request=req, latency_s=lat, analysis_start_s=0.0, ready_s=0.0)
+
+    results = [fake(i, lat,
+                    "urgent" if i < 3 else "batch" if i >= 8 else "normal",
+                    0.55)
+               for i, lat in enumerate(lats)]
+    m = compute_metrics(results, [], wall_s=2.0)
+    assert m.num_with_deadline == 10
+    assert m.deadline_misses == 5                 # 0.6 .. 1.0 miss 0.55
+    assert m.slo_attainment == 0.5
+    assert m.latency_p99_urgent_s == 0.3          # max of its 3 samples
+    assert m.latency_p99_normal_s == 0.8
+    assert m.latency_p99_batch_s == 1.0
+    # empty input stays vacuous, not NaN
+    e = compute_metrics([], [], wall_s=0.0)
+    assert e.slo_attainment == 1.0 and e.num_with_deadline == 0
+    assert e.latency_p99_urgent_s == 0.0
+    flat = list(m.summary().values())
+    assert np.isfinite(np.asarray(flat, dtype=np.float64)).all()
+
+
+def test_all_deadlines_expired_edge():
+    """A trace whose deadlines cannot be met: attainment 0, every result
+    a miss — and the schedules themselves are untouched."""
+    trace = generate_trace(TraceConfig(
+        num_scenarios=3, seed=11, priorities=("urgent",),
+        slo_by_class=(("urgent", 1e-9),), **QUICK))
+    svc = StreamingScheduler(budget=BUDGET,
+                             stream=StreamConfig(batch_rows=4))
+    results = svc.run(trace)
+    m = svc.last_metrics
+    assert m.num_with_deadline == 3 and m.deadline_misses == 3
+    assert m.slo_attainment == 0.0
+    assert all(r.deadline_met is False for r in results)
+    assert m.latency_p99_urgent_s > 0.0
+    assert m.latency_p99_normal_s == 0.0          # class has no members
+    for r in results:
+        fit = analyze_serial([r.request])[0].fit
+        ref = run_sweep([fit], budget=BUDGET, seeds=[r.request.seed])
+        assert r.best_fitness == ref.best_fitness[0, 0]
+
+    assert svc.run([]) == []                      # empty trace stays clean
+    assert svc.last_metrics.slo_attainment == 1.0
+    assert svc.last_metrics.num_with_deadline == 0
+
+
+# ---------------------------------------------------------------------------
 # multi-device: subprocess with fake devices
 # ---------------------------------------------------------------------------
 def _run_sub(code: str, devices: int = 8) -> str:
@@ -308,3 +584,69 @@ def test_streamed_bit_identical_multidevice():
         print('STREAM-SHARDED-OK')
     """)
     assert "STREAM-SHARDED-OK" in out
+
+
+def test_slo_admission_multidevice():
+    """8 fake devices: SLO-aware admission (priorities + deadlines on
+    the trace, anytime split on a prepared scenario) reorders dispatch
+    but every routed schedule still equals its standalone run_sweep /
+    run_strategy row."""
+    out = _run_sub("""
+        import jax, numpy as np
+        assert len(jax.devices()) == 8, jax.devices()
+        from repro.core.strategies import get_strategy, run_strategy
+        from repro.core.sweep import SweepConfig, run_sweep
+        from repro.memo import ScheduleMemo
+        from repro.stream import (PreparedScenario, StreamConfig,
+                                  StreamingScheduler, TraceConfig,
+                                  analyze_serial, generate_trace)
+
+        trace = generate_trace(TraceConfig(
+            num_scenarios=6, seed=3, group_size=12,
+            bw_ladder_gb=(1.0, 16.0), settings=("S2",), mixes=("Light",),
+            priorities=("urgent", "batch", "batch"),
+            slo_by_class=(("urgent", 0.5),)))
+        memo = ScheduleMemo(near=False)
+        svc = StreamingScheduler(budget=300, memo=memo,
+                                 stream=StreamConfig(
+                                     batch_rows=4, analysis_workers=2,
+                                     anytime_budget=60))
+        fit = analyze_serial(trace[:1])[0].fit
+        res = svc.run(trace, prepared=[PreparedScenario(
+            fit=fit, seed=999, uid=100, priority="urgent",
+            deadline_s=2.0)])
+        m = svc.last_metrics
+        assert m.num_with_deadline >= 2, m
+        # EVERY deadline-carrying miss splits: interim out, silent twin
+        # refined into the memo
+        assert m.anytime_interims >= 1, m
+        assert m.anytime_refinements == m.anytime_interims, m
+        assert any(b.num_devices > 1 for b in svc.last_batches), \\
+            [b.num_devices for b in svc.last_batches]
+
+        strat = get_strategy("magma")
+        for r in res:
+            # r.budget is what the row was computed at (60 for an
+            # anytime interim, 300 otherwise): the row equals the
+            # standalone search at THAT budget
+            assert r.anytime_interim == (r.budget == 60), r
+            if r.request.uid == 100:
+                assert r.anytime_interim
+                ref = run_strategy(strat, fit, budget=60, seed=999)
+                assert r.best_fitness == ref.best_fitness
+                np.testing.assert_array_equal(r.best_accel, ref.best_accel)
+            else:
+                f = analyze_serial([r.request])[0].fit
+                ref = run_sweep([f], budget=r.budget,
+                                seeds=[r.request.seed],
+                                sweep=SweepConfig(max_devices=1))
+                assert r.best_fitness == ref.best_fitness[0, 0]
+                np.testing.assert_array_equal(r.best_accel,
+                                              ref.best_accel[0, 0])
+        hit = memo.lookup(fit, strat, 300, 999)
+        assert hit is not None           # the silent refinement landed
+        ref = run_strategy(strat, fit, budget=300, seed=999)
+        assert hit.best_fitness == ref.best_fitness
+        print('STREAM-SLO-OK')
+    """)
+    assert "STREAM-SLO-OK" in out
