@@ -5,7 +5,8 @@ efficiency.
 
 Each ablation level runs all its seeds as one
 ``run_sweep(strategy=MagmaStrategy(cfg))`` call — compiled and sharded,
-every row bit-identical to a standalone ``m3e.search(cfg=cfg, seed=s)``."""
+every row bit-identical to a standalone
+``m3e.search(seed=s, strategy_kwargs={"cfg": cfg})``."""
 from __future__ import annotations
 
 import numpy as np

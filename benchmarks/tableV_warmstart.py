@@ -41,7 +41,7 @@ def run(pop=100, group_size=100, n_insts=4, epochs=(0, 1, 30, 100)):
     cfg = MagmaConfig(population=pop)
     # full optimization on Insts0 seeds the warm-start cache
     m3e.search(groups[0], method="magma", budget=pop * max(epochs),
-               seed=0, cfg=cfg)
+               seed=0, strategy_kwargs={"cfg": cfg})
 
     print("== Table V: warm-start on (Mix, S4, BW=1) ==")
     print("row," + ",".join(f"Insts{i}" for i in range(1, n_insts + 1)))
@@ -56,7 +56,7 @@ def run(pop=100, group_size=100, n_insts=4, epochs=(0, 1, 30, 100)):
         for e in epochs:
             budget = max(pop * e, pop)   # e generations (>=1 evaluation)
             res = m3e.search(groups[i], method="magma", budget=budget,
-                             seed=i, cfg=cfg)
+                             seed=i, strategy_kwargs={"cfg": cfg})
             if e == 0:
                 # Trf-0-ep = best of the transferred population, no evolution
                 finals[e].append(res.history_best[0])

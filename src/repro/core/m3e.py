@@ -9,29 +9,33 @@ every method receives the same jitted fitness and the same sampling
 budget, exactly the paper's protocol.  Device-resident strategies run as
 one compiled scan (and batch/shard via ``repro.core.sweep``); host-only
 methods run their own loops behind the same ``SearchResult`` contract.
-Unknown method names raise a ``ValueError`` listing what is registered,
-and kwargs a method does not accept are rejected instead of silently
-swallowed.
+Unknown method names raise a ``ValueError`` listing what is registered.
+
+``search`` takes the run-level knobs as explicit keyword-only parameters
+and strategy hyper-parameters as ``strategy_kwargs`` — a typo'd run knob
+is a loud ``TypeError`` and an unknown strategy kwarg is the registry's
+``ValueError``, instead of the old pop-list silently partitioning
+``**kw``.  ``search_front`` is the multi-objective tier: the same
+problem, a vector ``ObjectiveSpec``, a ``multi_objective`` strategy
+(nsga2), returning a ``repro.core.pareto.ParetoFront``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Mapping, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core.encoding import decode_to_lists
-from repro.core.fitness import FitnessFn
+from repro.core.fitness import FitnessFn, ObjectiveLike
 from repro.core.job_analyzer import JobAnalysisTable, JobAnalyzer
 from repro.core.magma import MagmaConfig, SearchResult, magma_search
+from repro.core.pareto import ParetoFront, pareto_front
 from repro.core.strategies import get_strategy, run_strategy
 from repro.core.warmstart import WarmStartEngine
 from repro.costmodel.accelerators import AcceleratorConfig
 from repro.workloads.benchmark import JobGroup
-
-# kwargs consumed by the run, not the strategy constructor
-_RUN_KWARGS = ("init_population", "keep_population", "engine")
 
 
 @dataclasses.dataclass
@@ -48,23 +52,45 @@ class M3E:
     """
     accel: AcceleratorConfig
     bw_sys: float                       # bytes/s
-    objective: str = "throughput"
+    objective: ObjectiveLike = "throughput"
     use_kernel: bool = False
     warm_start: Optional[WarmStartEngine] = None
     memo: Optional[object] = None       # repro.memo.ScheduleMemo
 
-    def prepare(self, group: JobGroup) -> FitnessFn:
+    def prepare(self, group: JobGroup,
+                objective: ObjectiveLike = None) -> FitnessFn:
+        """The problem's ``FitnessFn``; ``objective`` overrides the
+        instance default (``search_front`` passes its vector spec here)."""
         table = JobAnalyzer(self.accel).analyze(group.jobs)
-        return FitnessFn(table, bw_sys=self.bw_sys, objective=self.objective,
-                         use_kernel=self.use_kernel)
+        return FitnessFn(
+            table, bw_sys=self.bw_sys,
+            objective=self.objective if objective is None else objective,
+            use_kernel=self.use_kernel)
 
     def search(self, group: JobGroup, method: str = "magma",
-               budget: int = 10_000, seed: int = 0, **kw) -> SearchResult:
+               budget: int = 10_000, seed: int = 0, *,
+               engine: Optional[str] = None,
+               init_population=None,
+               keep_population: Optional[bool] = None,
+               strategy_kwargs: Optional[Mapping] = None) -> SearchResult:
+        """Solve one mapping problem with a registered method.
+
+        Run-level knobs are explicit keyword-only parameters (a typo is
+        a ``TypeError``); method hyper-parameters (``cfg=`` for magma,
+        ``population=`` for the black-box strategies, ...) go in
+        ``strategy_kwargs`` and are validated by the strategy registry.
+        """
         fit = self.prepare(group)
-        run_kw = {k: kw.pop(k) for k in _RUN_KWARGS if k in kw}
-        strategy = get_strategy(method, **kw)
+        strategy = get_strategy(method, **dict(strategy_kwargs or {}))
+        run_kw = {}
+        if engine is not None:
+            run_kw["engine"] = engine
+        if init_population is not None:
+            run_kw["init_population"] = init_population
+        if keep_population is not None:
+            run_kw["keep_population"] = keep_population
         if self.memo is not None and strategy.device_resident \
-                and "init_population" not in run_kw:
+                and init_population is None:
             # a caller-supplied init_population bypasses the memo
             # entirely: replaying a cold record would discard the seed,
             # and recording the seeded result under the cold fingerprint
@@ -84,6 +110,47 @@ class M3E:
                 self.warm_start.remember(group.task, res.final_population)
             return res
         return run_strategy(strategy, fit, budget=budget, seed=seed, **run_kw)
+
+    def search_front(self, group: JobGroup,
+                     objectives: Sequence[str] = ("latency", "energy",
+                                                  "edp"),
+                     method: str = "nsga2",
+                     budget: int = 10_000, seed: int = 0, *,
+                     engine: Optional[str] = None,
+                     strategy_kwargs: Optional[Mapping] = None
+                     ) -> ParetoFront:
+        """Co-search several objectives at once -> a ``ParetoFront``.
+
+        ``objectives`` name registered objective columns (first one is
+        the anytime scalar the search history tracks); ``method`` must be
+        a ``multi_objective`` strategy (``nsga2``).  Rides the same memo
+        as ``search`` — the converged archive population is recorded
+        under the vector spec's fingerprint, so a re-seen frontier
+        request replays its front without a search.
+        """
+        fit = self.prepare(group, objective=tuple(objectives))
+        strategy = get_strategy(method, **dict(strategy_kwargs or {}))
+        if not getattr(strategy, "multi_objective", False):
+            raise ValueError(
+                f"method {method!r} is single-objective; search_front "
+                "needs a multi_objective strategy such as 'nsga2'")
+        run_kw = {"keep_population": True}
+        if engine is not None:
+            run_kw["engine"] = engine
+        if self.memo is not None and strategy.device_resident:
+            res = self._search_memoized(group, strategy, fit, budget, seed,
+                                        run_kw)
+        else:
+            res = run_strategy(strategy, fit, budget=budget, seed=seed,
+                               **run_kw)
+        if res.final_population is None:
+            raise RuntimeError(
+                "search_front needs the converged population to extract "
+                "the front, but none came back (a memo record without a "
+                "stored population?)")
+        return pareto_front(fit, res.final_population,
+                            n_samples=res.n_samples,
+                            wall_time_s=res.wall_time_s)
 
     def _search_memoized(self, group: JobGroup, strategy, fit: FitnessFn,
                          budget: int, seed: int, run_kw) -> SearchResult:

@@ -1,0 +1,212 @@
+"""Pareto machinery — fixed-shape non-dominated sorting on device, plus
+host-side front extraction and hypervolume.
+
+Device half (pure JAX, traceable inside the strategy scan):
+
+  :func:`nd_ranks`            fast-non-dominated-sort ranks via a pairwise
+                              domination matrix peeled front by front with
+                              ``lax.fori_loop`` — every shape static, so
+                              the whole thing folds into the shared
+                              ``lax.scan`` driver
+  :func:`crowding_distance`   NSGA-II crowding, one lexicographic
+                              ``lax.sort`` per objective with the rank as
+                              the major key (the same multi-key sort trick
+                              ``encoding.decode`` uses) and per-front
+                              spans via scatter-min/max
+
+All objectives are **maximized** (the ``repro.core.fitness`` convention:
+every registered column is higher-is-better).
+
+Host half: :class:`ParetoFront` (the result surfaced through
+``M3E.search_front`` / ``StreamingScheduler.schedule_front`` / serve),
+:func:`pareto_front` which re-evaluates a converged population through
+``FitnessFn.objectives`` — so every front point is bit-identical to a
+standalone evaluation of that genome — and an exact recursive
+:func:`hypervolume` for the benchmark gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# device primitives (pure JAX)
+# ---------------------------------------------------------------------------
+def domination_matrix(F: jnp.ndarray) -> jnp.ndarray:
+    """(N, N) bool: ``D[i, j]`` — point i dominates point j (maximization:
+    >= everywhere, > somewhere)."""
+    ge = jnp.all(F[:, None, :] >= F[None, :, :], axis=-1)
+    gt = jnp.any(F[:, None, :] > F[None, :, :], axis=-1)
+    return ge & gt
+
+
+def nd_ranks(F: jnp.ndarray) -> jnp.ndarray:
+    """(N,) i32 non-domination ranks (0 = the Pareto front) of an ``(N,
+    M)`` objective matrix — fast non-dominated sort, fixed shape.
+
+    Peels fronts with a ``fori_loop`` of N iterations (the worst case: a
+    strict domination chain); each iteration marks the points no
+    *remaining* point dominates.  Every remaining set has maximal
+    elements, so each iteration peels at least one point and every point
+    gets a rank < N.
+    """
+    N = F.shape[0]
+    dom = domination_matrix(F)
+
+    def body(r, carry):
+        rank, remaining = carry
+        dominated = jnp.any(dom & remaining[:, None], axis=0)
+        front = remaining & ~dominated
+        rank = jnp.where(front, r, rank)
+        return rank, remaining & ~front
+
+    rank0 = jnp.full((N,), N, dtype=jnp.int32)
+    rank, _ = jax.lax.fori_loop(0, N, body,
+                                (rank0, jnp.ones((N,), dtype=bool)))
+    return rank
+
+
+def crowding_distance(F: jnp.ndarray, rank: jnp.ndarray) -> jnp.ndarray:
+    """(N,) f32 NSGA-II crowding distances, computed within each rank's
+    front (boundary points per front and objective get +inf).
+
+    Per objective: one lexicographic ``lax.sort`` keyed (rank, value)
+    groups each front contiguously in value order, neighbor gaps are a
+    ``roll`` away, and per-front normalization spans come from
+    scatter-min/max over the rank index.
+    """
+    N, M = F.shape
+    idx = jnp.arange(N, dtype=jnp.int32)
+    pos = jnp.arange(N)
+    crowd = jnp.zeros((N,), jnp.float32)
+    for m in range(M):                      # M is static and small
+        f = F[:, m]
+        gmin = jnp.full((N + 1,), jnp.inf, f.dtype).at[rank].min(f)
+        gmax = jnp.full((N + 1,), -jnp.inf, f.dtype).at[rank].max(f)
+        span = gmax - gmin
+        r_s, f_s, i_s = jax.lax.sort((rank, f, idx), num_keys=2)
+        first = (pos == 0) | (r_s != jnp.roll(r_s, 1))
+        last = (pos == N - 1) | (r_s != jnp.roll(r_s, -1))
+        gap = jnp.roll(f_s, -1) - jnp.roll(f_s, 1)
+        contrib = jnp.where(first | last, jnp.inf,
+                            gap / jnp.maximum(span[r_s], 1e-12))
+        crowd = crowd.at[i_s].add(contrib.astype(jnp.float32))
+    return crowd
+
+
+def crowded_order(rank: jnp.ndarray, crowd: jnp.ndarray) -> jnp.ndarray:
+    """(N,) i32 permutation sorting by (rank asc, crowding desc, index) —
+    NSGA-II's survivor/elitism order as ONE lexicographic ``lax.sort``
+    (ties broken by index, so the order is fully deterministic)."""
+    idx = jnp.arange(rank.shape[0], dtype=jnp.int32)
+    return jax.lax.sort((rank.astype(jnp.int32), -crowd, idx), num_keys=3)[2]
+
+
+# ---------------------------------------------------------------------------
+# host-side front extraction + quality metrics
+# ---------------------------------------------------------------------------
+def non_dominated_mask(F: np.ndarray) -> np.ndarray:
+    """(N,) bool: which rows of a host (N, M) matrix are non-dominated
+    (maximization)."""
+    F = np.asarray(F)
+    ge = (F[:, None, :] >= F[None, :, :]).all(-1)
+    gt = (F[:, None, :] > F[None, :, :]).any(-1)
+    return ~(ge & gt).any(axis=0)
+
+
+@dataclasses.dataclass
+class ParetoFront:
+    """A non-dominated set of schedules over named objectives.
+
+    ``objectives[k, j]`` is point k's value of ``names[j]`` (higher is
+    better — the registry convention), with the matching genome in
+    ``accel[k] / prio[k]``.  Points are unique in objective space and
+    sorted by the first objective, descending.
+    """
+    names: Tuple[str, ...]
+    objectives: np.ndarray      # (F, M) f32
+    accel: np.ndarray           # (F, G) int32
+    prio: np.ndarray            # (F, G) float32
+    # provenance: how the front was computed (0/None when replayed)
+    n_samples: int = 0
+    wall_time_s: float = 0.0
+
+    def __len__(self) -> int:
+        return int(self.objectives.shape[0])
+
+    def best(self, name: str) -> int:
+        """Index of the front point maximizing one named objective."""
+        j = self.names.index(name)
+        return int(np.argmax(self.objectives[:, j]))
+
+    def point(self, k: int) -> dict:
+        """Front point k as a plain dict (objectives by name + genome)."""
+        return {**{n: float(self.objectives[k, j])
+                   for j, n in enumerate(self.names)},
+                "accel": self.accel[k], "prio": self.prio[k]}
+
+    def summary(self) -> dict:
+        return {"size": len(self), "names": list(self.names),
+                **{f"best_{n}": float(self.objectives[:, j].max())
+                   for j, n in enumerate(self.names)}}
+
+
+def pareto_front(fit, population, *, n_samples: int = 0,
+                 wall_time_s: float = 0.0) -> ParetoFront:
+    """Extract the non-dominated front of a converged population.
+
+    ``fit`` is a (multi-column) ``FitnessFn``; ``population`` an
+    ``encoding.Population`` (the strategy's final archive).  Every point's
+    objective row is re-evaluated through ``fit.objectives`` — the SAME
+    evaluation a standalone scalar search of each column runs — so the
+    front values are bit-identical to standalone evaluations of the same
+    genomes, independent of how the search was batched or sharded.
+    Duplicate genomes (archives keep copies) collapse to one point per
+    distinct objective row.
+    """
+    accel = np.asarray(population.accel)
+    prio = np.asarray(population.prio)
+    objs = np.asarray(fit.objectives(jnp.asarray(accel), jnp.asarray(prio)))
+    _, keep = np.unique(objs, axis=0, return_index=True)
+    keep = np.sort(keep)
+    objs, accel, prio = objs[keep], accel[keep], prio[keep]
+    mask = non_dominated_mask(objs)
+    objs, accel, prio = objs[mask], accel[mask], prio[mask]
+    order = np.argsort(-objs[:, 0], kind="stable")
+    return ParetoFront(
+        names=tuple(fit.objective_spec.names),
+        objectives=objs[order], accel=accel[order], prio=prio[order],
+        n_samples=int(n_samples), wall_time_s=float(wall_time_s))
+
+
+def hypervolume(points: np.ndarray, ref: np.ndarray) -> float:
+    """Exact hypervolume of a maximization point set w.r.t. a dominated
+    reference corner (recursive objective slicing — fine for the
+    front/objective counts the benchmarks use; not for M >> 3).
+
+    Points are clipped to the reference from below, so a point worse than
+    ``ref`` in some objective simply contributes nothing there.
+    """
+    pts = np.maximum(np.asarray(points, dtype=np.float64),
+                     np.asarray(ref, dtype=np.float64))
+    pts = pts[non_dominated_mask(pts)]
+    return float(_hv(pts.tolist(), list(np.asarray(ref, dtype=np.float64))))
+
+
+def _hv(pts, ref) -> float:
+    if not pts:
+        return 0.0
+    if len(ref) == 1:
+        return max(p[0] for p in pts) - ref[0]
+    pts = sorted(pts, key=lambda p: -p[-1])
+    hv = 0.0
+    for i, p in enumerate(pts):
+        depth = p[-1] - (pts[i + 1][-1] if i + 1 < len(pts) else ref[-1])
+        if depth > 0:
+            hv += depth * _hv([q[:-1] for q in pts[:i + 1]], ref[:-1])
+    return hv

@@ -4,14 +4,25 @@ Every optimization method behind one interface (``SearchStrategy``:
 ``init``/``ask``/``tell`` over pure pytree state), one device-resident
 scan driver (``run_strategy``) and one registry (``get_strategy`` /
 ``available`` / ``register``) — the successor of the old ``m3e.METHODS``
-lambda dict.  Device-resident strategies (magma, random, stdga, de, pso)
-fold whole searches into single compiled calls and ride
+lambda dict.  Device-resident strategies (magma, random, stdga, de, pso,
+nsga2) fold whole searches into single compiled calls and ride
 ``repro.core.sweep.run_sweep(strategy=...)`` sharded across devices;
 host-only methods (cmaes, tbpsa, a2c, ppo2, the hand heuristics) run
 their own loops behind the same ``SearchResult`` contract.
 
     from repro.core.strategies import get_strategy, run_strategy, available
     res = run_strategy(get_strategy("de"), fitness_fn, budget=10_000, seed=0)
+
+Vector-objective contract: a strategy with ``multi_objective = True``
+(currently ``nsga2``) receives a ``(P, M)`` objective matrix in ``tell``
+— the columns of the problem's ``ObjectiveSpec`` (see
+``repro.core.fitness.register_objective``), every column higher-is-better
+— instead of a ``(P,)`` scalar.  The driver evaluates such problems via
+``FitnessFn.objectives`` and tracks the anytime best/history on column 0,
+so ``SearchResult`` shapes are unchanged; the converged non-dominated set
+comes from ``repro.core.pareto.pareto_front(fit,
+result.final_population)`` (surfaced as ``M3E.search_front``).  Scalar
+strategies given a multi-column spec fail loudly in ``run_strategy``.
 """
 from repro.core.strategies.base import (HostSearchStrategy, SearchStrategy,
                                         WarmStart, decode_continuous)
@@ -23,6 +34,8 @@ from repro.core.strategies.driver import (plan_generations, run_strategy,
 from repro.core.strategies.magma_strategy import MagmaState, MagmaStrategy
 from repro.core.strategies.blackbox import (DEStrategy, PSOStrategy,
                                             RandomStrategy, StdGAStrategy)
+from repro.core.strategies.nsga2 import (NSGA2State, NSGA2Strategy,
+                                         encode_continuous)
 from repro.core.strategies import host as _host  # registers host-only methods
 
 __all__ = [
@@ -32,4 +45,5 @@ __all__ = [
     "plan_generations", "run_strategy", "scan_strategy",
     "MagmaState", "MagmaStrategy",
     "DEStrategy", "PSOStrategy", "RandomStrategy", "StdGAStrategy",
+    "NSGA2State", "NSGA2Strategy", "encode_continuous",
 ]

@@ -90,6 +90,10 @@ class SearchStrategy:
     # whether ``init`` accepts a Population / WarmStart hand-off (the
     # memo's near-hit seeding is gated on this)
     supports_init_population = False
+    # whether ``tell`` consumes a (P, M) objective matrix instead of a
+    # (P,) scalar column; the driver evaluates via FitnessFn.objectives
+    # and ranks anytime-best on column 0 (see strategies/driver.py)
+    multi_objective = False
 
     @property
     def ask_size(self) -> int:

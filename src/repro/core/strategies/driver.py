@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fitness import FitnessFn, evaluate_params
+from repro.core.fitness import (FitnessFn, ObjectiveSpec, evaluate_objectives,
+                                evaluate_params)
 from repro.core.magma import SearchResult
 from repro.core.strategies.base import SearchStrategy
 
@@ -44,12 +45,23 @@ def scan_strategy(strategy: SearchStrategy, state, eval_fn, group_size: int,
 
     Returns ``(best_fit, best_accel, best_prio, history, state)`` with
     ``history`` the per-generation best-so-far curve.
+
+    Multi-objective strategies (``strategy.multi_objective``) run the same
+    scan with ``eval_fn`` returning a ``(P, M)`` matrix: ``tell`` consumes
+    the full matrix while the anytime best/history track column 0 (the
+    first name of the ``ObjectiveSpec`` — the documented anytime scalar),
+    so every output shape is unchanged.  The final ``tell`` always runs
+    for them — the archive is the result, and it must fold in the last
+    evaluated offspring regardless of the sample budget's remainder.
     """
+    mo = getattr(strategy, "multi_objective", False)
+
     def eval_update(accel, prio, bf, ba, bp):
         fit = eval_fn(accel, prio)
-        i = jnp.argmax(fit)
-        better = fit[i] > bf
-        bf = jnp.where(better, fit[i], bf)
+        col = fit[:, 0] if mo else fit
+        i = jnp.argmax(col)
+        better = col[i] > bf
+        bf = jnp.where(better, col[i], bf)
         ba = jnp.where(better, accel[i], ba)
         bp = jnp.where(better, prio[i], bp)
         return fit, bf, ba, bp
@@ -69,7 +81,7 @@ def scan_strategy(strategy: SearchStrategy, state, eval_fn, group_size: int,
     state, accel, prio = strategy.ask(state)
     fit, bf, ba, bp = eval_update(accel, prio, bf, ba, bp)
     hist = jnp.concatenate([hist, bf[None]])
-    if evolve_last:      # budget not exhausted: the legacy loop evolves once more
+    if evolve_last or mo:    # legacy loop evolves once more; mo archives
         state = strategy.tell(state, fit)
     return bf, ba, bp, hist, state
 
@@ -78,10 +90,16 @@ def scan_strategy(strategy: SearchStrategy, state, eval_fn, group_size: int,
                                    "evolve_last", "use_kernel", "objective"))
 def _run_scan(strategy: SearchStrategy, key, params, init_population,
               num_accels: int, generations: int, evolve_last: bool,
-              use_kernel: bool, objective: Optional[str]):
-    def eval_fn(a, p):
-        return evaluate_params(params, a, p, num_accels=num_accels,
-                               use_kernel=use_kernel, objective=objective)
+              use_kernel: bool, objective: Optional[ObjectiveSpec]):
+    if getattr(strategy, "multi_objective", False):
+        def eval_fn(a, p):
+            return evaluate_objectives(params, a, p, num_accels=num_accels,
+                                       use_kernel=use_kernel,
+                                       objective=objective)
+    else:
+        def eval_fn(a, p):
+            return evaluate_params(params, a, p, num_accels=num_accels,
+                                   use_kernel=use_kernel, objective=objective)
     state = strategy.init(key, params, init_population=init_population)
     return scan_strategy(strategy, state, eval_fn, params.lat.shape[-2],
                          generations, evolve_last)
@@ -90,19 +108,22 @@ def _run_scan(strategy: SearchStrategy, key, params, init_population,
 def _run_loop(strategy: SearchStrategy, key, fitness_fn: FitnessFn,
               init_population, generations: int, evolve_last: bool):
     """Host-stepped ask/eval/tell loop (one dispatch per generation)."""
+    mo = getattr(strategy, "multi_objective", False)
     state = strategy.init(key, fitness_fn.params,
                           init_population=init_population)
     bf, ba, bp = -np.inf, None, None
     hist = []
     for g in range(generations):
         state, accel, prio = strategy.ask(state)
-        fit = np.asarray(fitness_fn(accel, prio))
-        i = int(np.argmax(fit))
-        if fit[i] > bf:
-            bf = float(fit[i])
+        fit = np.asarray(fitness_fn.objectives(accel, prio) if mo
+                         else fitness_fn(accel, prio))
+        col = fit[:, 0] if mo else fit
+        i = int(np.argmax(col))
+        if col[i] > bf:
+            bf = float(col[i])
             ba, bp = np.asarray(accel[i]), np.asarray(prio[i])
         hist.append(bf)
-        if g + 1 < generations or evolve_last:
+        if g + 1 < generations or evolve_last or mo:
             state = strategy.tell(state, jnp.asarray(fit))
     return bf, ba, bp, np.asarray(hist), state
 
@@ -131,6 +152,13 @@ def run_strategy(strategy: SearchStrategy, fitness_fn: FitnessFn,
                 "hand-off (init_population/keep_population) is not supported")
         return strategy.search(fitness_fn, budget, seed)
 
+    if (fitness_fn.num_objectives > 1
+            and not getattr(strategy, "multi_objective", False)):
+        raise ValueError(
+            f"strategy {strategy.name!r} is single-objective but the "
+            f"fitness has {fitness_fn.num_objectives} columns "
+            f"({fitness_fn.objective_spec.token!r}); use a multi_objective "
+            "strategy such as 'nsga2' or a scalar ObjectiveSpec")
     strategy = strategy.bind(fitness_fn.num_accels)
     engine = engine or "scan"
     generations, evolve_last = plan_generations(budget, strategy.ask_size)
@@ -142,7 +170,7 @@ def run_strategy(strategy: SearchStrategy, fitness_fn: FitnessFn,
         bf, ba, bp, hist, state = _run_scan(
             strategy, key, fitness_fn.params, init_population,
             fitness_fn.num_accels, generations, evolve_last,
-            fitness_fn.use_kernel, fitness_fn.objective)
+            fitness_fn.use_kernel, fitness_fn.objective_spec)
         jax.block_until_ready(hist)
         bf = float(bf)
         ba, bp = np.asarray(ba), np.asarray(bp)

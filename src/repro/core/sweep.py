@@ -50,8 +50,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.core.fitness import (FitnessFn, FitnessParams, evaluate_params,
-                                normalize_scenarios)
+from repro.core.fitness import (FitnessFn, FitnessParams, ObjectiveSpec,
+                                as_objective_spec, evaluate_objectives,
+                                evaluate_params, normalize_scenarios)
 from repro.core.magma import BatchSearchResult, MagmaConfig
 from repro.core.strategies import (MagmaStrategy, SearchStrategy, available,
                                    get_strategy, plan_generations,
@@ -103,7 +104,7 @@ class SweepResult(BatchSearchResult):
 
 def _row_search(key, params, strategy: SearchStrategy, generations: int,
                 evolve_last: bool, group_size: int, use_kernel: bool,
-                objective: Optional[str], keep_population: bool = False,
+                objective: Optional[ObjectiveSpec], keep_population: bool = False,
                 warm=None):
     """One (scenario, seed) row — identical trace to ``run_strategy``'s
     scanned engine: seed the strategy state from the row key, run the
@@ -115,9 +116,17 @@ def _row_search(key, params, strategy: SearchStrategy, generations: int,
     ``keep_population`` additionally emits the converged population —
     extra scan *outputs* only, the search trace is unchanged, so both
     variants stay bit-identical on the schedule outputs."""
-    def eval_fn(a, pr):
-        return evaluate_params(params, a, pr, num_accels=strategy.num_accels,
-                               use_kernel=use_kernel, objective=objective)
+    if getattr(strategy, "multi_objective", False):
+        def eval_fn(a, pr):
+            return evaluate_objectives(params, a, pr,
+                                       num_accels=strategy.num_accels,
+                                       use_kernel=use_kernel,
+                                       objective=objective)
+    else:
+        def eval_fn(a, pr):
+            return evaluate_params(params, a, pr,
+                                   num_accels=strategy.num_accels,
+                                   use_kernel=use_kernel, objective=objective)
 
     state = strategy.init(key, params, init_population=warm)
     out = scan_strategy(strategy, state, eval_fn, group_size, generations,
@@ -131,7 +140,7 @@ def _row_search(key, params, strategy: SearchStrategy, generations: int,
 @lru_cache(maxsize=None)
 def _chunk_fn(mesh, strategy: SearchStrategy, generations: int,
               evolve_last: bool, group_size: int, use_kernel: bool,
-              objective: Optional[str], keep_population: bool = False,
+              objective: Optional[ObjectiveSpec], keep_population: bool = False,
               warm: bool = False):
     """Compiled (rows_keys, rows_params[, rows_warm]) -> per-row results,
     cached so repeated sweeps with the same mesh/shape/strategy reuse one
@@ -159,7 +168,7 @@ def _chunk_fn(mesh, strategy: SearchStrategy, generations: int,
 
 def row_executable(strategy: SearchStrategy, generations: int,
                    evolve_last: bool, group_size: int, use_kernel: bool,
-                   objective: Optional[str], num_devices: int,
+                   objective, num_devices: int,
                    keep_population: bool = False, warm: bool = False):
     """(compiled row-batch fn, device_put target) for ``num_devices``.
 
@@ -179,6 +188,15 @@ def row_executable(strategy: SearchStrategy, generations: int,
     seeding each row's initial population device-side.  Neither changes
     the schedule outputs for a given (key, params): same search trace.
     """
+    # canonicalize so a bare name ('edp'), a 1-tuple spec, and the spec a
+    # FitnessFn carries all hit the SAME cached executable — the stream
+    # passes fit.objective_spec, run_sweep the normalize_scenarios spec
+    objective = as_objective_spec(objective)
+    if (getattr(strategy, "multi_objective", False) and objective is None):
+        raise ValueError(
+            f"strategy {strategy.name!r} is multi_objective and needs a "
+            "static ObjectiveSpec shared by every row; the dynamic "
+            "per-row objective_code select is scalar-only")
     mesh = None if num_devices == 1 else _sweep_mesh(num_devices)
     target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
               if mesh is not None else jax.devices()[0])
@@ -265,7 +283,7 @@ class RowsResult:
 
 def run_rows(rows_params: FitnessParams, rows_keys, *,
              strategy: SearchStrategy, generations: int, evolve_last: bool,
-             use_kernel: bool = False, objective: Optional[str] = None,
+             use_kernel: bool = False, objective: Optional[ObjectiveSpec] = None,
              sweep: SweepConfig | None = None,
              memo=None, rows_family: Optional[Sequence[str]] = None
              ) -> RowsResult:
@@ -356,7 +374,7 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
 def _record_rows(memo, rr: RowsResult, rows_params, rows_keys,
                  strategy: SearchStrategy, generations: int,
                  evolve_last: bool, use_kernel: bool,
-                 objective: Optional[str],
+                 objective: Optional[ObjectiveSpec],
                  rows_family: Optional[Sequence[str]], pops) -> None:
     """Feed every solved row into the schedule memo.  The sampling budget
     is reconstructed from (generations, evolve_last) — the fingerprint

@@ -21,6 +21,7 @@ structure Algorithm 1 models.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +34,10 @@ class TPUChipModel:
     ici_links: int = 4
     vmem_bytes: float = 128 * 2**20
     mxu_dim: int = 128
+    watts: float = 200.0            # per-chip board power while busy
+    ici_power_frac: float = 0.08    # extra power per log2(slice) of ICI
+    #                                 fan-out (all-reduce keeps every link
+    #                                 busy on bigger slices)
 
 
 V5E = TPUChipModel()
@@ -74,3 +79,15 @@ class TPUSubmesh:
         latency = max(compute_t, memory_t)
         req_bw = host_bytes / latency if latency > 0 else 0.0
         return latency, req_bw
+
+    def energy_j(self, latency_s: float) -> float:
+        """Energy to hold the whole slice for ``latency_s``: every chip
+        burns board power for the job's duration, plus ICI power growing
+        with the slice's all-reduce fan-out (``ici_power_frac`` per
+        log2 chip).  Under the roofline's perfect 1/tp latency scaling
+        ``latency x chips`` is tp-invariant, so the ICI term is what makes
+        a big slice fast but strictly MORE energy than a small one — the
+        latency/energy tension the multi-objective tier searches over."""
+        ici = 1.0 + self.chip.ici_power_frac * math.log2(max(
+            self.num_chips, 1))
+        return latency_s * self.num_chips * self.chip.watts * ici

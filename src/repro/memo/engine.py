@@ -303,22 +303,17 @@ class ScheduleMemo:
         return len(self.store)
 
 
-@dataclasses.dataclass(frozen=True)
-class _RowView:
-    """The minimal fit-shaped view of one sweep row (``run_rows`` has
-    sliced ``FitnessParams`` + statics, not a ``FitnessFn``)."""
-    params: object
-    num_accels: int
-    use_kernel: bool
-    objective: Optional[str]
-
-
-def row_view(params, *, num_accels: int, use_kernel: bool,
-             objective: Optional[str]) -> _RowView:
+def row_view(params, *, num_accels: int, use_kernel: bool, objective):
     """Adapt a single row's ``FitnessParams`` slice + executable statics
-    to the ``fit``-like object the memo APIs take."""
-    return _RowView(params=params, num_accels=num_accels,
-                    use_kernel=bool(use_kernel), objective=objective)
+    to the ``fit``-like object the memo APIs take — a
+    ``repro.core.fitness.ProblemSpec``, the same frozen NamedTuple
+    ``normalize_scenarios`` returns (sweep, stream, and memo share one
+    scenario-statics shape).  ``objective`` may be a bare name, an
+    ``ObjectiveSpec``, or None; the fingerprint layer canonicalizes."""
+    from repro.core.fitness import ProblemSpec, as_objective_spec
+    return ProblemSpec(params=params, num_accels=int(num_accels),
+                       use_kernel=bool(use_kernel),
+                       objective=as_objective_spec(objective))
 
 
 def _resize_rows(x: np.ndarray, rows: int) -> np.ndarray:

@@ -35,7 +35,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.fitness import FitnessParams
+from repro.core.fitness import FitnessParams, objective_token
 
 
 def strategy_signature(strategy) -> str:
@@ -60,12 +60,19 @@ def _table_bytes(params: FitnessParams) -> bytes:
 
 
 def scenario_digest(params: FitnessParams, *, num_accels: int,
-                    use_kernel: bool, objective: Optional[str]) -> str:
-    """Digest of one scenario's cost-relevant content (no search axes)."""
+                    use_kernel: bool, objective) -> str:
+    """Digest of one scenario's cost-relevant content (no search axes).
+
+    ``objective`` may be a bare name, an ``ObjectiveSpec``, or None (the
+    dynamic select); it is canonicalized to its token so a scalar spec
+    hashes byte-identically to the pre-spec bare-name format — existing
+    stored records keep exact-hitting.
+    """
     sha = hashlib.sha256()
     G, A = int(params.lat.shape[-2]), int(params.lat.shape[-1])
     sha.update(f"scenario|G={G}|A={A}|num_accels={num_accels}"
-               f"|kernel={bool(use_kernel)}|objective={objective}"
+               f"|kernel={bool(use_kernel)}"
+               f"|objective={objective_token(objective)}"
                .encode())
     sha.update(_table_bytes(params))
     return sha.hexdigest()
@@ -73,7 +80,7 @@ def scenario_digest(params: FitnessParams, *, num_accels: int,
 
 def search_fingerprint(params: FitnessParams, key, strategy, *,
                        generations: int, evolve_last: bool,
-                       use_kernel: bool, objective: Optional[str]) -> str:
+                       use_kernel: bool, objective) -> str:
     """Content address of one (scenario, strategy, protocol, key) row."""
     sha = hashlib.sha256()
     sha.update(scenario_digest(params, num_accels=strategy.num_accels,
@@ -88,7 +95,7 @@ def search_fingerprint(params: FitnessParams, key, strategy, *,
 
 
 def family_key(params: FitnessParams, strategy, *, use_kernel: bool,
-               objective: Optional[str], family: str = "") -> Tuple:
+               objective, family: str = "") -> Tuple:
     """The transfer-validity class of a scenario (near-hit candidates).
 
     A converged population is transferable across scenarios that share
@@ -98,8 +105,8 @@ def family_key(params: FitnessParams, strategy, *, use_kernel: bool,
     "" when the caller has no provenance, which still groups by shape).
     """
     G, A = int(params.lat.shape[-2]), int(params.lat.shape[-1])
-    return (strategy.name, G, A, bool(use_kernel), str(objective),
-            str(family))
+    return (strategy.name, G, A, bool(use_kernel),
+            str(objective_token(objective)), str(family))
 
 
 def feature_vector(params: FitnessParams) -> np.ndarray:

@@ -235,18 +235,26 @@ class MultiTenantEngine:
 
     # -- analysis + scheduling --------------------------------------------------
     def analyze(self, jobs: Sequence[ServeJob]):
-        """Job-analysis table over (job x submesh) from the TPU cost model."""
+        """Job-analysis table over (job x submesh) from the TPU cost model.
+
+        Carries an energy column (``TPUSubmesh.energy_j``: whole-slice
+        board power x duration) so the serving tier can search energy and
+        EDP objectives — a tp16 slice finishes a job ~4x faster than tp4
+        but holds 4x the chips, a real latency/energy frontier.
+        """
         G, A = len(jobs), len(self.submeshes)
         lat = np.zeros((G, A))
         bw = np.zeros((G, A))
+        en = np.zeros((G, A))
         for g, job in enumerate(jobs):
             for a, sm in enumerate(self.submeshes):
                 l, b = sm.cost.profile(job.flops, job.hbm_bytes,
                                        job.host_bytes)
                 lat[g, a] = l
                 bw[g, a] = b
+                en[g, a] = sm.cost.energy_j(l)
         flops = np.array([j.flops for j in jobs])
-        return table_from_arrays(lat, bw, flops)
+        return table_from_arrays(lat, bw, flops, energy=en)
 
     def schedule(self, jobs: Sequence[ServeJob],
                  method: Optional[str] = None,
@@ -298,6 +306,41 @@ class MultiTenantEngine:
         if execute:
             out["outputs"] = self.execute(jobs, queues, prompts)
         return out
+
+    def schedule_front(self, jobs: Sequence[ServeJob],
+                       objectives: Sequence[str] = ("latency", "energy",
+                                                    "edp"),
+                       method: str = "nsga2") -> Dict:
+        """Co-search several serving objectives at once -> the frontier.
+
+        Same profile tables as :meth:`schedule` (the energy column comes
+        from whole-slice board power), a vector ``ObjectiveSpec``, routed
+        through ``stream_service().schedule_front`` under the job group's
+        strictest tenant SLO.  Returns the ``ParetoFront`` plus, for each
+        front point, the decoded queues and simulated makespan — the
+        operator picks the latency/energy trade-off, every candidate
+        already a complete schedule.
+        """
+        table = self.analyze(jobs)
+        fit = FitnessFn(table, bw_sys=self.system_bw,
+                        objective=tuple(objectives))
+        slo = self.slo_for(jobs)
+        front = self.stream_service().schedule_front(
+            fit, seed=self.seed, budget=self.budget, strategy=method,
+            priority=slo.priority, deadline_s=slo.deadline_s)
+        points = []
+        for k in range(len(front)):
+            pt = front.point(k)
+            local = decode_to_lists(pt["accel"], pt["prio"],
+                                    len(self.submeshes))
+            makespan = simulate_numpy(local, table.lat, table.bw,
+                                      self.system_bw)
+            points.append({
+                "objectives": {n: pt[n] for n in front.names},
+                "queues": [[int(jobs[i].uid) for i in q] for q in local],
+                "makespan_s": float(makespan),
+            })
+        return {"front": front, "points": points, "table": table}
 
     # -- execution (functional correctness on the scheduled order) -------------
     def execute(self, jobs: Sequence[ServeJob], queues: List[List[int]],

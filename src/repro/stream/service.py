@@ -44,13 +44,16 @@ import threading
 import time
 from collections import deque
 from concurrent.futures import FIRST_COMPLETED, wait
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Dict, List, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import numpy as np
 
-from repro.core.fitness import FitnessFn
+from repro.core.encoding import Population
+from repro.core.fitness import FitnessFn, ObjectiveSpec
 from repro.core.magma import MagmaConfig, SearchResult
+from repro.core.pareto import ParetoFront, pareto_front
 from repro.core.strategies import SearchStrategy, WarmStart, plan_generations
 from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
 from repro.stream.analysis import AnalysisPool, ReadyScenario
@@ -141,6 +144,24 @@ class StreamConfig:
                                  "deadline-aware admission")
 
 
+class CompatKey(NamedTuple):
+    """Everything a compiled row executable is specialized on — only
+    scenarios agreeing on all of it may share a device batch.  A
+    NamedTuple so admission/dispatch/metrics address the axes by name
+    while legacy consumers still unpack it positionally like the old
+    bare 7-tuple (``base, G, A, use_kernel, objective, budget, is_warm =
+    compat_key``).  ``objective`` is the fit's canonical
+    ``ObjectiveSpec`` (a bare-name fit and a 1-tuple-spec fit group into
+    the same batch)."""
+    strategy: SearchStrategy
+    group_size: int
+    num_accels: int
+    use_kernel: bool
+    objective: Optional[ObjectiveSpec]
+    budget: int
+    warm: bool
+
+
 @dataclasses.dataclass(frozen=True)
 class PreparedScenario:
     """A client-supplied, already-analyzed scenario (e.g. serve.engine's
@@ -181,6 +202,10 @@ class StreamResult:
     # budget) or an exact hit of a refined record (the refined budget)
     budget: int = 0
     anytime_interim: bool = False
+    # the converged population (multi-objective rows and memoized
+    # strategies emit one) — ``repro.core.pareto.pareto_front`` turns it
+    # into the request's ParetoFront
+    final_population: Optional[Population] = None
 
     @property
     def latency_s(self) -> float:
@@ -297,16 +322,17 @@ class StreamingScheduler:
                 "streamed; run it per problem via run_strategy")
         return strategy
 
-    def _compat_key(self, ready: ReadyScenario) -> Tuple:
-        """Everything a compiled row executable is specialized on: only
-        scenarios agreeing on all of it may share a device batch.  Warm-
-        seeded rows take a different executable (extra WarmStart input),
-        so the warm flag is a compatibility axis too."""
+    def _compat_key(self, ready: ReadyScenario) -> CompatKey:
+        """The scenario's :class:`CompatKey`.  Warm-seeded rows take a
+        different executable (extra WarmStart input), so the warm flag is
+        a compatibility axis too."""
         fit = ready.fit
         budget = ready.request.budget or self.budget
-        return (self._resolve_override(ready.strategy), fit.group_size,
-                fit.num_accels, fit.use_kernel, fit.objective, budget,
-                ready.warm is not None)
+        return CompatKey(
+            strategy=self._resolve_override(ready.strategy),
+            group_size=fit.group_size, num_accels=fit.num_accels,
+            use_kernel=fit.use_kernel, objective=fit.objective_spec,
+            budget=budget, warm=ready.warm is not None)
 
     def _bucket(self, n: int) -> int:
         b = 1
@@ -373,11 +399,14 @@ class StreamingScheduler:
         return take
 
     def _keep_population(self, strategy: SearchStrategy) -> bool:
-        """Whether dispatches emit converged populations (memo attached
-        and the strategy hands populations off)."""
-        return self.memo is not None and strategy.supports_init_population
+        """Whether dispatches emit converged populations: memo attached
+        and the strategy hands populations off, OR the strategy is
+        multi-objective — its archive population IS the deliverable (the
+        ParetoFront is extracted from it)."""
+        return ((self.memo is not None and strategy.supports_init_population)
+                or getattr(strategy, "multi_objective", False))
 
-    def _dispatch(self, compat_key: Tuple, members: List[ReadyScenario]
+    def _dispatch(self, compat_key: CompatKey, members: List[ReadyScenario]
                   ) -> _Inflight:
         base, G, A, use_kernel, objective, budget, is_warm = compat_key
         strategy = base.bind(A)
@@ -425,7 +454,7 @@ class StreamingScheduler:
             uid=p.uid, arrival_s=now, mix="<prepared>",
             setting="<prepared>", bw_gb=p.fit.bw_sys / 1024 ** 3,
             group_size=p.fit.group_size, seed=p.seed,
-            objective=p.fit.objective, budget=p.budget,
+            objective=p.fit.objective_spec.token, budget=p.budget,
             priority=p.priority, deadline_s=p.deadline_s)
         return ReadyScenario(request=req, fit=p.fit, analysis_start_s=now,
                              ready_s=now,
@@ -461,6 +490,9 @@ class StreamingScheduler:
                     warm_seeded=is_warm,
                     budget=budget,
                     anytime_interim=m.anytime,
+                    final_population=(Population(accel=pops[0][i],
+                                                 prio=pops[1][i])
+                                      if pops is not None else None),
                 ))
             if self.memo is not None:
                 self.memo.record(
@@ -527,6 +559,10 @@ class StreamingScheduler:
                         # treat exact and warm as disjoint (exact wins)
                         warm_seeded=hit.warm_seeded,
                         budget=budget,
+                        final_population=(
+                            None if hit.population is None else
+                            Population(accel=hit.population[0],
+                                       prio=hit.population[1])),
                     ))
                     return
                 # miss: seed from the nearest stored scenario of the
@@ -791,6 +827,37 @@ class StreamingScheduler:
         return self.run(prepared=[PreparedScenario(
             fit=fit, seed=seed, budget=budget, strategy=strategy,
             priority=priority, deadline_s=deadline_s)])[0]
+
+    def schedule_front(self, fit: FitnessFn, seed: int = 0,
+                       budget: Optional[int] = None,
+                       strategy: Union[SearchStrategy, str, None] = "nsga2",
+                       priority: str = "normal",
+                       deadline_s: Optional[float] = None) -> ParetoFront:
+        """Schedule one prepared multi-column scenario and return its
+        Pareto frontier — the streamed twin of ``M3E.search_front``.
+        ``fit`` carries the vector ``ObjectiveSpec``; the strategy must
+        be ``multi_objective`` (default nsga2).  The front is extracted
+        host-side from the routed archive population by re-evaluating it
+        through ``fit.objectives`` — every front point bit-identical to a
+        standalone evaluation — and memo replays of a re-seen frontier
+        request rebuild the identical front from the stored population.
+        """
+        strat = self._resolve_override(strategy)
+        if not getattr(strat, "multi_objective", False):
+            raise ValueError(
+                f"strategy {strat.name!r} is single-objective; "
+                "schedule_front needs a multi_objective strategy "
+                "such as 'nsga2'")
+        res = self.schedule_prepared(fit, seed=seed, budget=budget,
+                                     strategy=strategy, priority=priority,
+                                     deadline_s=deadline_s)
+        if res.final_population is None:
+            raise RuntimeError(
+                "schedule_front got a result without a population "
+                "(a memo record stored without one?)")
+        return pareto_front(fit, res.final_population,
+                            n_samples=res.n_samples,
+                            wall_time_s=res.done_s - res.dispatch_s)
 
     def close(self) -> None:
         self.pool.shutdown()

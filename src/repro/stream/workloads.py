@@ -65,6 +65,17 @@ class ScenarioRequest:
                               # (slack is infinite, only the class ranks)
 
     def __post_init__(self):
+        # objective names are registry-validated at admission time, not
+        # deep inside a compiled dispatch: a typo'd trace fails loudly
+        # listing what is registered.  Multi-column provenance tokens
+        # ("pareto:a+b", stamped by prepared frontier requests) validate
+        # per component.
+        from repro.core.fitness import objective_info
+        names = (self.objective[len("pareto:"):].split("+")
+                 if self.objective.startswith("pareto:")
+                 else [self.objective])
+        for n in names:
+            objective_info(n)
         if self.priority not in PRIORITY_CLASSES:
             raise ValueError(f"unknown priority {self.priority!r}; "
                              f"expected one of {PRIORITY_CLASSES}")

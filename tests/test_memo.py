@@ -278,12 +278,12 @@ def test_m3e_memo_search_and_replay():
     m3e = M3E(accel=get_setting("S2"), bw_sys=1 * GB, memo=memo)
     group = build_task_groups("Lang", group_size=12, seed=0)[0]
     cold = M3E(accel=get_setting("S2"), bw_sys=1 * GB).search(
-        group, budget=BUDGET, seed=0, cfg=CFG)
-    r1 = m3e.search(group, budget=BUDGET, seed=0, cfg=CFG)
+        group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG})
+    r1 = m3e.search(group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG})
     # first solve with an empty memo: identical to the un-memoized search
     assert r1.best_fitness == cold.best_fitness
     np.testing.assert_array_equal(r1.best_accel, cold.best_accel)
-    r2 = m3e.search(group, budget=BUDGET, seed=0, cfg=CFG)
+    r2 = m3e.search(group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG})
     # second solve: replayed (wall_time_s == 0.0 marks the skip)
     assert r2.wall_time_s == 0.0
     assert r2.best_fitness == r1.best_fitness
@@ -302,13 +302,13 @@ def test_m3e_explicit_init_population_bypasses_memo():
     fit = m3e.prepare(group)
     pop = random_population(jax.random.PRNGKey(42), CFG.population,
                             fit.group_size, fit.num_accels)
-    seeded = m3e.search(group, budget=BUDGET, seed=0, cfg=CFG,
+    seeded = m3e.search(group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG},
                         init_population=pop)
     assert len(memo) == 0 and memo.stats.records == 0
     # a later plain search is a genuine cold search, not a seeded replay
-    plain = m3e.search(group, budget=BUDGET, seed=0, cfg=CFG)
+    plain = m3e.search(group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG})
     cold = M3E(accel=get_setting("S2"), bw_sys=1 * GB).search(
-        group, budget=BUDGET, seed=0, cfg=CFG)
+        group, budget=BUDGET, seed=0, strategy_kwargs={"cfg": CFG})
     assert plain.best_fitness == cold.best_fitness
     np.testing.assert_array_equal(plain.best_accel, cold.best_accel)
     # and the seeded run really did use the seed (differs from cold)

@@ -1,0 +1,238 @@
+"""Multi-objective tier: NSGA-II, the Pareto front, and its service routes.
+
+The contract under test: a ``multi_objective`` strategy rides the SAME
+compiled scan driver as every scalar strategy (scan == loop bit-for-bit),
+and every point of the extracted :class:`ParetoFront` is bit-identical to
+a standalone single-objective evaluation of that genome — through
+``run_strategy``, the sharded sweep, ``M3E.search_front``, the streaming
+service, and memo replay.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import M3E
+from repro.core.encoding import random_population
+from repro.core.fitness import FitnessFn
+from repro.core.job_analyzer import table_from_arrays
+from repro.core.pareto import (ParetoFront, crowded_order,
+                               crowding_distance, domination_matrix,
+                               hypervolume, nd_ranks, non_dominated_mask,
+                               pareto_front)
+from repro.core.strategies import get_strategy, run_strategy
+from repro.core.sweep import run_sweep
+from repro.costmodel import get_setting
+from repro.memo import ScheduleMemo
+from repro.stream import StreamConfig, StreamingScheduler
+from repro.workloads import build_task_groups
+
+GB = 1024 ** 3
+BUDGET = 240
+OBJS = ("latency", "energy", "edp")
+
+
+def _fitness(G=12, A=3, seed=0, bw_sys=2.0, objective=OBJS):
+    rng = np.random.default_rng(seed)
+    table = table_from_arrays(rng.uniform(1e-4, 5e-3, (G, A)),
+                              rng.uniform(1e8, 2e9, (G, A)),
+                              rng.uniform(1e9, 1e10, G),
+                              energy=rng.uniform(1e-3, 1e-1, (G, A)))
+    return FitnessFn(table, bw_sys=bw_sys * GB, objective=objective)
+
+
+def _nsga2(pop=16):
+    return get_strategy("nsga2", population=pop)
+
+
+# ---------------------------------------------------------------------------
+# device primitives
+# ---------------------------------------------------------------------------
+def test_nd_ranks_hand_case():
+    # maximization: (3,1), (2,2), (1,3) are mutually non-dominated;
+    # (1,1) is dominated only by (2,2); (0,0) by everything
+    F = np.array([[3.0, 1.0], [2.0, 2.0], [1.0, 3.0],
+                  [1.0, 1.0], [0.0, 0.0]], dtype=np.float32)
+    rank = np.asarray(nd_ranks(F))
+    assert rank.tolist() == [0, 0, 0, 1, 2]
+    D = np.asarray(domination_matrix(F))
+    assert D[1, 3] and D[3, 4] and not D[0, 2] and not D.diagonal().any()
+
+
+def test_crowding_boundaries_and_interior():
+    # one front, one objective axis varied: boundary points infinite,
+    # interior gap-normalized
+    F = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]],
+                 dtype=np.float32)
+    rank = nd_ranks(F)
+    assert np.asarray(rank).tolist() == [0, 0, 0, 0]
+    crowd = np.asarray(crowding_distance(F, rank))
+    assert np.isinf(crowd[0]) and np.isinf(crowd[3])
+    # interior: (gap/span) per objective = (2/3 + 2/3)
+    np.testing.assert_allclose(crowd[1:3], 4.0 / 3.0, rtol=1e-6)
+    order = np.asarray(crowded_order(rank, crowding_distance(F, rank)))
+    assert sorted(order.tolist()) == [0, 1, 2, 3]
+    assert set(order[:2].tolist()) == {0, 3}        # boundaries survive first
+
+
+def test_crowding_ranks_do_not_mix():
+    # two fronts: crowding is computed within each front, and the
+    # crowded order lists ALL of front 0 before any of front 1
+    F = np.array([[2.0, 2.0], [1.0, 3.0], [1.0, 1.0], [0.5, 0.5]],
+                 dtype=np.float32)
+    rank = nd_ranks(F)
+    order = np.asarray(crowded_order(rank, crowding_distance(F, rank)))
+    r = np.asarray(rank)
+    assert (np.diff(r[order]) >= 0).all()
+
+
+def test_hypervolume_exact():
+    assert hypervolume(np.array([[2.0, 1.0], [1.0, 2.0]]),
+                       np.array([0.0, 0.0])) == pytest.approx(3.0)
+    # dominated points add nothing
+    assert hypervolume(np.array([[2.0, 1.0], [1.0, 2.0], [0.5, 0.5]]),
+                       np.array([0.0, 0.0])) == pytest.approx(3.0)
+    # 3-D box
+    assert hypervolume(np.array([[1.0, 2.0, 3.0]]),
+                       np.array([0.0, 0.0, 0.0])) == pytest.approx(6.0)
+    # points below the reference are clipped, not negative
+    assert hypervolume(np.array([[-1.0, -1.0]]),
+                       np.array([0.0, 0.0])) == pytest.approx(0.0)
+
+
+def test_non_dominated_mask():
+    F = np.array([[3.0, 1.0], [2.0, 2.0], [1.0, 1.0]])
+    assert non_dominated_mask(F).tolist() == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# the strategy through the shared driver
+# ---------------------------------------------------------------------------
+def test_nsga2_scan_loop_parity():
+    # the device-strategy convention (tests/test_strategies.py): the
+    # host-stepped loop agrees with the compiled scan to float tolerance
+    # (fusion may contract mul-adds differently); bit-identity is the
+    # compiled paths' guarantee (scan == sweep rows == stream)
+    fit = _fitness()
+    a = run_strategy(_nsga2(), fit, budget=BUDGET, seed=0, engine="scan",
+                     keep_population=True)
+    b = run_strategy(_nsga2(), fit, budget=BUDGET, seed=0, engine="loop",
+                     keep_population=True)
+    np.testing.assert_allclose(a.best_fitness, b.best_fitness, rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.final_population.accel),
+                                  np.asarray(b.final_population.accel))
+    np.testing.assert_allclose(np.asarray(a.final_population.prio),
+                               np.asarray(b.final_population.prio),
+                               rtol=1e-5)
+    assert a.n_samples == b.n_samples
+
+
+def test_front_points_bit_identical_to_standalone_scalars():
+    fit = _fitness()
+    res = run_strategy(_nsga2(), fit, budget=BUDGET, seed=0,
+                       keep_population=True)
+    front = pareto_front(fit, res.final_population,
+                         n_samples=res.n_samples)
+    assert isinstance(front, ParetoFront) and len(front) >= 1
+    assert front.names == OBJS
+    # non-dominated and unique in objective space
+    assert non_dominated_mask(front.objectives).all()
+    assert len(np.unique(front.objectives, axis=0)) == len(front)
+    # sorted by column 0 descending (the anytime scalar)
+    assert (np.diff(front.objectives[:, 0]) <= 0).all()
+    # every point, every column: standalone scalar FitnessFn evaluation
+    # of that genome returns the same bytes
+    for j, name in enumerate(front.names):
+        solo = _fitness(objective=name)
+        vals = np.asarray(solo(jax.numpy.asarray(front.accel),
+                               jax.numpy.asarray(front.prio)),
+                          dtype=np.float32)
+        np.testing.assert_array_equal(vals, front.objectives[:, j])
+    # the anytime scalar the driver tracked is a point of column 0
+    assert float(res.best_fitness) == float(front.objectives[:, 0].max())
+
+
+def test_single_objective_nsga2_and_mismatch_errors():
+    # M = 1 degenerates cleanly: the front is the best scalar point(s)
+    fit = _fitness(objective="latency")
+    res = run_strategy(_nsga2(), fit, budget=BUDGET, seed=0,
+                       keep_population=True)
+    front = pareto_front(fit, res.final_population)
+    assert len(front) == 1
+    assert float(front.objectives[0, 0]) == float(res.best_fitness)
+    # a scalar strategy cannot consume a multi-column fitness
+    with pytest.raises(ValueError, match="single-objective"):
+        run_strategy(get_strategy("magma"), _fitness(), budget=BUDGET,
+                     seed=0)
+
+
+def test_sweep_rows_bit_identical_to_standalone_nsga2():
+    fns = [_fitness(seed=0, bw_sys=1.0), _fitness(seed=1, bw_sys=4.0)]
+    strat = _nsga2()
+    swept = run_sweep(fns, budget=BUDGET, seeds=[0, 1], strategy=strat)
+    for i, fn in enumerate(fns):
+        for j, seed in enumerate([0, 1]):
+            solo = run_strategy(strat, fn, budget=BUDGET, seed=seed)
+            assert float(swept.best_fitness[i, j]) == \
+                float(solo.best_fitness), (i, seed)
+
+
+# ---------------------------------------------------------------------------
+# M3E + memo
+# ---------------------------------------------------------------------------
+def test_m3e_search_front_and_memo_replay():
+    group = build_task_groups("Lang", group_size=12, seed=0)[0]
+    memo = ScheduleMemo()
+    m3e = M3E(accel=get_setting("S2"), bw_sys=1 * GB, memo=memo)
+    front = m3e.search_front(group, objectives=OBJS, budget=BUDGET,
+                            strategy_kwargs={"population": 16})
+    assert len(front) >= 1 and front.names == OBJS
+    assert non_dominated_mask(front.objectives).all()
+    # cold front == memo-free front
+    bare = M3E(accel=get_setting("S2"), bw_sys=1 * GB).search_front(
+        group, objectives=OBJS, budget=BUDGET,
+        strategy_kwargs={"population": 16})
+    np.testing.assert_array_equal(front.objectives, bare.objectives)
+    # replay: the stored population rebuilds the identical front with no
+    # new samples
+    replay = m3e.search_front(group, objectives=OBJS, budget=BUDGET,
+                              strategy_kwargs={"population": 16})
+    np.testing.assert_array_equal(replay.objectives, front.objectives)
+    np.testing.assert_array_equal(replay.accel, front.accel)
+    # replay provenance: the stored sample count, zero wall time (the
+    # MemoHit convention — nothing ran)
+    assert replay.n_samples == front.n_samples
+    assert replay.wall_time_s == 0.0 and front.wall_time_s > 0.0
+    with pytest.raises(ValueError, match="multi_objective"):
+        m3e.search_front(group, method="magma", budget=BUDGET)
+
+
+# ---------------------------------------------------------------------------
+# streaming service
+# ---------------------------------------------------------------------------
+def test_stream_schedule_front_matches_standalone():
+    fit = _fitness()
+    strat = _nsga2()
+    with StreamingScheduler(budget=BUDGET,
+                            stream=StreamConfig(analysis_workers=1)) as svc:
+        front = svc.schedule_front(fit, seed=0, strategy=strat)
+        with pytest.raises(ValueError, match="single-objective"):
+            svc.schedule_front(fit, seed=0, strategy="magma")
+    res = run_strategy(strat, fit, budget=BUDGET, seed=0,
+                       keep_population=True)
+    solo = pareto_front(fit, res.final_population)
+    np.testing.assert_array_equal(front.objectives, solo.objectives)
+    np.testing.assert_array_equal(front.accel, solo.accel)
+    np.testing.assert_array_equal(front.prio, solo.prio)
+
+
+def test_stream_front_memo_replay():
+    fit = _fitness()
+    strat = _nsga2()
+    memo = ScheduleMemo()
+    with StreamingScheduler(budget=BUDGET, memo=memo,
+                            stream=StreamConfig(analysis_workers=1)) as svc:
+        first = svc.schedule_front(fit, seed=0, strategy=strat)
+        again = svc.schedule_front(fit, seed=0, strategy=strat)
+    np.testing.assert_array_equal(first.objectives, again.objectives)
+    np.testing.assert_array_equal(first.accel, again.accel)
+    np.testing.assert_array_equal(first.prio, again.prio)

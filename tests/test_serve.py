@@ -177,3 +177,31 @@ def test_execute_runs_schedule_and_matches_reference(engine):
         want.append(int(cur[0, 0]))
         pos += 1
     np.testing.assert_array_equal(toks[0], np.array(want))
+
+
+def test_schedule_front_serves_the_frontier(engine):
+    """The multi-objective serving tier: the profile table carries a real
+    energy column (whole-slice board power), and ``schedule_front``
+    returns a non-dominated set of complete schedules."""
+    from repro.core.pareto import non_dominated_mask
+
+    reqs = [("granite-3-2b", 128, 8)] * 3 + [("falcon-mamba-7b", 64, 8)] * 3
+    jobs = engine.jobs_for_requests(reqs)
+    table = engine.analyze(jobs)
+    assert table.energy is not None and (table.energy > 0).all()
+    # a tp16 slice is faster but costs more energy than tp4 on every job
+    subs = [s.name for s in engine.submeshes]
+    tp16, tp4 = subs.index("tp16_a"), subs.index("tp4_a")
+    assert (table.lat[:, tp16] < table.lat[:, tp4]).all()
+    assert (table.energy[:, tp16] > table.energy[:, tp4]).all()
+
+    out = engine.schedule_front(jobs)
+    front = out["front"]
+    assert front.names == ("latency", "energy", "edp")
+    assert len(front) >= 1 and len(out["points"]) == len(front)
+    assert non_dominated_mask(front.objectives).all()
+    all_uids = sorted(j.uid for j in jobs)
+    for pt in out["points"]:
+        assert sorted(u for q in pt["queues"] for u in q) == all_uids
+        assert pt["makespan_s"] > 0 and np.isfinite(pt["makespan_s"])
+        assert set(pt["objectives"]) == {"latency", "energy", "edp"}

@@ -106,7 +106,14 @@ def test_m3e_search_dispatch_errors():
     group = build_task_groups("Mix", group_size=16, seed=0)[0]
     with pytest.raises(ValueError, match="unknown strategy"):
         m3e.search(group, method="definitely_not_a_method", budget=100)
+    # strategy hyper-parameters go through strategy_kwargs and are
+    # validated by the registry...
     with pytest.raises(ValueError, match="unknown kwarg"):
+        m3e.search(group, method="de", budget=100,
+                   strategy_kwargs={"mutation": 0.5})
+    # ...while a typo'd run-level knob is a loud TypeError, not a
+    # silently-partitioned **kw
+    with pytest.raises(TypeError):
         m3e.search(group, method="de", budget=100, mutation=0.5)
 
 

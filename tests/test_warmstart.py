@@ -18,12 +18,12 @@ def test_warmstart_transfer_beats_random_init():
     groups = build_task_groups("Lang", group_size=40, num_groups=2, seed=0)
     cfg = MagmaConfig(population=40)
     # optimize on group 0 -> populates the cache
-    m3e.search(groups[0], method="magma", budget=2000, seed=0, cfg=cfg)
+    m3e.search(groups[0], method="magma", budget=2000, seed=0, strategy_kwargs={"cfg": cfg})
     assert ws.has("Lang")
     # Trf-0-ep: one generation from the transferred population
-    warm = m3e.search(groups[1], method="magma", budget=40, seed=1, cfg=cfg)
+    warm = m3e.search(groups[1], method="magma", budget=40, seed=1, strategy_kwargs={"cfg": cfg})
     cold = M3E(accel=get_setting("S2"), bw_sys=1 * GB).search(
-        groups[1], method="magma", budget=40, seed=1, cfg=cfg)
+        groups[1], method="magma", budget=40, seed=1, strategy_kwargs={"cfg": cfg})
     assert warm.best_fitness > cold.best_fitness
 
 
