@@ -47,6 +47,7 @@ import jax
 import numpy as np
 
 from repro.core.strategies import get_strategy, run_strategy
+from repro.lint.runtime import RecompileGuard
 from repro.memo import ScheduleMemo
 from repro.stream import (StreamConfig, StreamingScheduler, TraceConfig,
                           analyze_serial, generate_trace)
@@ -102,29 +103,38 @@ def run(num_scenarios: int, group_size: int, budget: int, batch_rows: int,
 
     # warm the service: greedy admission can hit any bucket size, so all
     # of them are compiled up front (the long-lived-service startup cost)
-    # and the measured comparison is pipeline-vs-serial, not cold-vs-warm
-    t0 = time.perf_counter()
-    svc.warmup(trace)
-    print(f"warmup (all bucket executables): "
-          f"{time.perf_counter() - t0:.2f} s")
+    # and the measured comparison is pipeline-vs-serial, not cold-vs-warm.
+    # RecompileGuard holds the service to that: ANY compile after
+    # guard.warmup() (a bucket the warmup missed, a strategy that stopped
+    # hashing equal) aborts the benchmark naming the executable, instead
+    # of silently polluting the timings with multi-second XLA stalls
+    guard = RecompileGuard(label="perf_stream")
+    with guard:
+        t0 = time.perf_counter()
+        svc.warmup(trace)
+        print(f"warmup (all bucket executables): "
+              f"{time.perf_counter() - t0:.2f} s")
+        guard.warmup()
 
-    # three modes, interleaved every rep so machine drift hits all alike:
-    #   serial      the pre-stream workflow exactly: fresh JobAnalyzer per
-    #               scenario (M3E.prepare behavior), analyze all, then sweep
-    #   serial-shared  same, but granted the stream's shared digest cache
-    #               (dropped before each rep) — isolates pipelining vs cache
-    #   pipelined   the full service
-    sides = {"serial": [], "serial_shared": [], "pipelined": []}
-    serial = pipelined = None
-    for rep in range(reps):
-        serial = svc.run_serial(trace)
-        sides["serial"].append(svc.last_metrics.summary())
-        svc.pool.reset()
-        svc.run_serial(trace, shared_cache=True)
-        sides["serial_shared"].append(svc.last_metrics.summary())
-        svc.pool.reset()
-        pipelined = svc.run(trace)
-        sides["pipelined"].append(svc.last_metrics.summary())
+        # three modes, interleaved every rep so drift hits all alike:
+        #   serial      the pre-stream workflow exactly: fresh JobAnalyzer
+        #               per scenario (M3E.prepare), analyze all, then sweep
+        #   serial-shared  same, but granted the stream's shared digest
+        #               cache (dropped before each rep) — isolates
+        #               pipelining vs cache
+        #   pipelined   the full service
+        sides = {"serial": [], "serial_shared": [], "pipelined": []}
+        serial = pipelined = None
+        for rep in range(reps):
+            serial = svc.run_serial(trace)
+            sides["serial"].append(svc.last_metrics.summary())
+            svc.pool.reset()
+            svc.run_serial(trace, shared_cache=True)
+            sides["serial_shared"].append(svc.last_metrics.summary())
+            svc.pool.reset()
+            pipelined = svc.run(trace)
+            sides["pipelined"].append(svc.last_metrics.summary())
+    print(f"recompiles after warmup: {len(guard.post_warmup)} (guarded)")
     m_serial = _report_side("serial", _median(sides["serial"]))
     m_shared = _report_side("ser-shared", _median(sides["serial_shared"]))
     m_pipe = _report_side("pipelined", _median(sides["pipelined"]))
@@ -161,6 +171,7 @@ def run(num_scenarios: int, group_size: int, budget: int, batch_rows: int,
         "pipelined_speedup": speedup,
         "overlap_only_speedup": overlap_speedup,
         "bit_identical": True,
+        "recompiles_post_warmup": len(guard.post_warmup),
         "mean_best_fitness": float(np.mean(
             [r.best_fitness for r in pipelined])),
         "unix_time": time.time(),

@@ -70,7 +70,7 @@ class JobAnalyzer:
     def __init__(self, accel: AcceleratorConfig, model: MaestroModel | None = None):
         self.accel = accel
         self.model = model or MaestroModel()
-        self._cache: dict = {}
+        self._cache: dict = {}       # @locked:_lock
         self._lock = threading.Lock()
 
     def _profile(self, layer: LayerDesc, sub: SubAccelConfig):

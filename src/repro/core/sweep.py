@@ -66,16 +66,24 @@ SWEEP_AXIS = "sweep"
 class SweepConfig:
     """How a scenario grid is partitioned across devices and time.
 
-    chunk_rows   max (scenario, seed) rows resident per compiled call;
-                 None runs the whole grid as one chunk.  Rounded up to a
-                 multiple of the device count so every shard is dense.
-    max_devices  shard over at most this many devices (None: all
-                 available).  ``max_devices=1`` forces the single-device
-                 vmapped path — the reference the sharded path is tested
-                 bit-identical against.
+    chunk_rows     max (scenario, seed) rows resident per compiled call;
+                   None runs the whole grid as one chunk.  Rounded up to
+                   a multiple of the device count so every shard is
+                   dense.
+    max_devices    shard over at most this many devices (None: all
+                   available).  ``max_devices=1`` forces the
+                   single-device vmapped path — the reference the
+                   sharded path is tested bit-identical against.
+    transfer_guard run the chunk loop under ``jax.transfer_guard(
+                   "disallow")`` (``repro.lint.runtime``): every
+                   intended transfer is an explicit ``device_put``/
+                   ``device_get``, so any implicit host<->device copy
+                   sneaking onto the hot path raises instead of silently
+                   syncing.  Off by default (sanitizer, not behavior).
     """
     chunk_rows: Optional[int] = None
     max_devices: Optional[int] = None
+    transfer_guard: bool = False
 
 
 @dataclasses.dataclass
@@ -337,21 +345,26 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
                 jax.device_put(jax.tree.map(lambda x: x[sl], rows_params),
                                target))
 
+    from repro.lint.runtime import transfer_sanitizer
+
     t0 = time.perf_counter()
     outs, walls = [], []
-    buf = put_chunk(0)
-    for i in range(n_chunks):
-        # double buffer: enqueue the NEXT chunk's host->device transfer
-        # before dispatching this chunk's compute, so the copy overlaps it
-        nxt = put_chunk(i + 1) if i + 1 < n_chunks else None
-        tc = time.perf_counter()
-        out = fn(*buf)
-        jax.block_until_ready(out)
-        walls.append(time.perf_counter() - tc)
-        # results go to host immediately: keeping them on device would
-        # grow the footprint with the whole grid, not just the chunk
-        outs.append(tuple(np.asarray(o) for o in out))
-        buf = nxt
+    with transfer_sanitizer(sweep.transfer_guard):
+        buf = put_chunk(0)
+        for i in range(n_chunks):
+            # double buffer: enqueue the NEXT chunk's host->device
+            # transfer before dispatching this chunk's compute, so the
+            # copy overlaps it
+            nxt = put_chunk(i + 1) if i + 1 < n_chunks else None
+            tc = time.perf_counter()
+            out = fn(*buf)
+            jax.block_until_ready(out)
+            walls.append(time.perf_counter() - tc)
+            # results go to host immediately (explicit device_get — the
+            # loop runs transfer-guard clean): keeping them on device
+            # would grow the footprint with the whole grid, not the chunk
+            outs.append(tuple(jax.device_get(o) for o in out))
+            buf = nxt
     wall = time.perf_counter() - t0
 
     def gather(j):

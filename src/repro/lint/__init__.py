@@ -1,0 +1,20 @@
+"""repro.lint — JAX-discipline static analyzer + runtime sanitizers.
+
+Static side (``python -m repro.lint src/ [--strict]``): five AST
+checkers tuned to this codebase's invariants — single-use PRNG keys,
+no host control flow on tracers, pure strategy state, lock-guarded
+shared mutation, byte-stable fingerprint inputs.  See ``docs/lint.md``.
+
+Runtime side (``repro.lint.runtime``): ``RecompileGuard`` (fails a run
+that recompiles after ``warmup()``), ``transfer_sanitizer`` (scoped
+``jax.transfer_guard("disallow")``), and ``repro.lint.race`` (the
+MemoStore/AnalysisPool concurrency harness).
+"""
+from repro.lint import checkers as _checkers  # registers L001..L005
+from repro.lint.core import (CHECKERS, RULES, Finding, SourceFile,
+                             lint_file, lint_text, run)
+
+del _checkers
+
+__all__ = ["CHECKERS", "RULES", "Finding", "SourceFile", "lint_file",
+           "lint_text", "run"]

@@ -1,0 +1,701 @@
+"""The five JAX-discipline checkers (L001..L005).
+
+Each checker is calibrated to THIS codebase's conventions (see
+``docs/lint.md`` for the catalog with bad/good examples):
+
+L001  prng-key-reuse          a tracked PRNG key variable consumed twice
+                              without an intervening split/fold_in
+L002  tracer-in-host-control  Python ``if``/``while``/``bool()`` on a
+                              value derived from a jitted function's
+                              traced parameters
+L003  impure-strategy-state   ``self``/global mutation or banned host
+                              APIs inside ``SearchStrategy.init/ask/tell``
+                              and ``lax.scan`` bodies
+L004  unlocked-shared-mutation  writes to ``# @locked:<name>`` attributes
+                              outside ``with self.<name>:`` / ``@holds:``
+L005  fingerprint-dtype-drift   digest inputs that depend on native byte
+                              order or the Python hash seed
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.lint.core import Finding, SourceFile, checker
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``jax.random.split`` for the matching Attribute chain; '' when the
+    expression is not a plain dotted name (calls/subscripts break it)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return f"{base}.{node.attr}" if base else node.attr
+    return ""
+
+
+def iter_functions(tree: ast.AST) -> Iterator[Tuple[ast.AST, Optional[str]]]:
+    """Every (sync/async) function in the module with its enclosing class
+    name (None at module level; nested functions inherit the class of the
+    method they are defined in)."""
+    def walk(node: ast.AST, cls: Optional[str]) -> Iterator:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.ClassDef):
+                yield from walk(child, child.name)
+            elif isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield child, cls
+                yield from walk(child, cls)
+            else:
+                yield from walk(child, cls)
+    yield from walk(tree, None)
+
+
+def param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _static_names_from_call(call: ast.Call, params: List[str]) -> Set[str]:
+    """static_argnames/static_argnums keywords of a jit(...) call."""
+    static: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, str):
+                    static.add(c.value)
+        elif kw.arg == "static_argnums":
+            for c in ast.walk(kw.value):
+                if isinstance(c, ast.Constant) and isinstance(c.value, int):
+                    if 0 <= c.value < len(params):
+                        static.add(params[c.value])
+    return static
+
+
+def jit_info(fn: ast.AST) -> Tuple[bool, Set[str]]:
+    """(is jit-decorated, static parameter names).  Recognizes ``@jit``,
+    ``@jax.jit``, ``@jax.jit(...)`` and ``@partial(jax.jit, ...)``."""
+    params = param_names(fn)
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = dotted_name(dec.func)
+            if name.split(".")[-1] == "partial" and dec.args:
+                inner = dec.args[0]
+                if dotted_name(inner).split(".")[-1] == "jit":
+                    return True, _static_names_from_call(dec, params)
+            elif name.split(".")[-1] == "jit":
+                return True, _static_names_from_call(dec, params)
+        elif dotted_name(dec).split(".")[-1] == "jit":
+            return True, set()
+    return False, set()
+
+
+def scan_body_names(tree: ast.AST) -> Set[str]:
+    """Names of functions passed (possibly via functools.partial) as the
+    body argument of ``lax.scan`` / ``jax.lax.scan`` in this module."""
+    bodies: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = dotted_name(node.func)
+        if fname not in ("lax.scan", "jax.lax.scan"):
+            continue
+        if not node.args:
+            continue
+        body = node.args[0]
+        if (isinstance(body, ast.Call)
+                and dotted_name(body.func).split(".")[-1] == "partial"
+                and body.args):
+            body = body.args[0]
+        name = dotted_name(body)
+        if name:
+            bodies.add(name.split(".")[-1])
+    return bodies
+
+
+# attributes whose access yields host-static metadata, not traced values
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding", "aval"}
+# calls whose result is host-static regardless of argument taint
+_STATIC_CALLS = {"len", "isinstance", "type", "getattr", "hasattr", "repr",
+                 "id", "callable", "range"}
+
+
+def expr_tainted(node: ast.AST, tainted: Set[str]) -> bool:
+    """Whether evaluating ``node`` touches a traced value: any tainted
+    Name flows through, EXCEPT under shape/dtype metadata access,
+    static-returning builtins, or ``is (not) None`` checks."""
+    if isinstance(node, ast.Name):
+        return node.id in tainted
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        return expr_tainted(node.value, tainted)
+    if isinstance(node, ast.Call):
+        fname = dotted_name(node.func)
+        if fname in _STATIC_CALLS:
+            return False
+        parts = [expr_tainted(a, tainted) for a in node.args]
+        parts += [expr_tainted(kw.value, tainted) for kw in node.keywords]
+        if not isinstance(node.func, ast.Name):
+            parts.append(expr_tainted(node.func, tainted))
+        return any(parts)
+    if isinstance(node, ast.Compare):
+        # ``x is None`` patterns gate on *presence* of an optional input,
+        # which is static under jit (tracers are never None)
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False
+        return any(expr_tainted(c, tainted)
+                   for c in [node.left] + node.comparators)
+    return any(expr_tainted(c, tainted) for c in ast.iter_child_nodes(node))
+
+
+# ---------------------------------------------------------------------------
+# L001 — prng-key-reuse
+# ---------------------------------------------------------------------------
+
+_KEY_FRESH = "fresh"
+_KEY_USED = "consumed"
+
+_KEY_PARAM_NAMES = {"key", "rng", "prng_key", "rng_key"}
+
+
+def _is_key_param(name: str) -> bool:
+    return name in _KEY_PARAM_NAMES or name.endswith("_key")
+
+
+def _is_key_source(call: ast.Call, env: Dict[str, str]) -> bool:
+    """Does this call mint fresh key material?  ``PRNGKey``/``key``/
+    ``fold_in`` always; ``split`` only when it is plausibly
+    ``jax.random.split`` (dotted through ``random``, or splitting a
+    variable we already track) — ``"a,b".split(",")`` must not count."""
+    fname = dotted_name(call.func)
+    tail = fname.split(".")[-1]
+    if tail in ("PRNGKey", "fold_in"):
+        return True
+    if tail == "key" and "random" in fname:
+        return True
+    if tail == "split":
+        if "random" in fname:
+            return True
+        return any(isinstance(a, ast.Name) and a.id in env
+                   for a in call.args)
+    return False
+
+
+@checker("L001")
+def check_prng_key_reuse(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn, _cls in iter_functions(sf.tree):
+        findings.extend(_l001_function(sf, fn))
+    return findings
+
+
+def _l001_function(sf: SourceFile, fn: ast.AST) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[Tuple[int, str]] = set()
+    env: Dict[str, str] = {n: _KEY_FRESH for n in param_names(fn)
+                           if _is_key_param(n)}
+
+    def emit(line: int, name: str) -> None:
+        if (line, name) not in seen:
+            seen.add((line, name))
+            findings.append(Finding(
+                sf.path, line, "L001",
+                f"PRNG key '{name}' consumed again without an intervening "
+                f"split/fold_in"))
+
+    def consume_uses(node: ast.AST) -> None:
+        """Every tracked key passed as a call argument is a consumption;
+        keys used via indexing (``keys[i]``) pick distinct sub-keys and
+        are exempt."""
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            if dotted_name(sub.func) in _STATIC_CALLS:
+                continue               # isinstance/len/... don't draw bits
+            args = list(sub.args) + [kw.value for kw in sub.keywords]
+            for a in args:
+                if isinstance(a, ast.Starred):
+                    a = a.value
+                if isinstance(a, ast.Name) and a.id in env:
+                    if env[a.id] == _KEY_USED:
+                        emit(sub.lineno, a.id)
+                    env[a.id] = _KEY_USED
+
+    def bind_targets(targets: List[ast.AST], value: ast.AST) -> None:
+        minted = isinstance(value, ast.Call) and _is_key_source(value, env)
+        unpacks_keys = (isinstance(value, ast.Name)
+                        and value.id in env) or (
+            isinstance(value, ast.Subscript)
+            and isinstance(value.value, ast.Name)
+            and value.value.id in env)
+        for t in targets:
+            if isinstance(t, (ast.Tuple, ast.List)):
+                for el in t.elts:
+                    if isinstance(el, ast.Starred):
+                        el = el.value
+                    if isinstance(el, ast.Name):
+                        if minted or unpacks_keys:
+                            env[el.id] = _KEY_FRESH
+                        else:
+                            env.pop(el.id, None)
+            elif isinstance(t, ast.Name):
+                if minted or unpacks_keys:
+                    env[t.id] = _KEY_FRESH
+                else:
+                    env.pop(t.id, None)
+
+    def run_stmt(stmt: ast.AST) -> bool:
+        """Process one statement; True when it terminates the block
+        (return/raise/break/continue), so a branch that exits early does
+        not leak its consumptions into the fall-through path."""
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return False                # nested scopes checked separately
+        if isinstance(stmt, ast.Assign):
+            consume_uses(stmt.value)
+            bind_targets(stmt.targets, stmt.value)
+        elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+            if stmt.value is not None:
+                consume_uses(stmt.value)
+                bind_targets([stmt.target], stmt.value)
+        elif isinstance(stmt, ast.If):
+            consume_uses(stmt.test)
+            before = dict(env)
+            body_exits = run_block(stmt.body)
+            after_body = dict(env)
+            env.clear()
+            env.update(before)
+            else_exits = run_block(stmt.orelse)
+            if body_exits and not else_exits:
+                pass                    # only the else path flows on
+            elif else_exits and not body_exits:
+                env.clear()
+                env.update(after_body)
+            else:                       # both flow (or both exit): merge,
+                for name, st in after_body.items():   # consumed wins
+                    if st == _KEY_USED or env.get(name) == _KEY_USED:
+                        env[name] = _KEY_USED
+                    else:
+                        env.setdefault(name, st)
+            return body_exits and else_exits and bool(stmt.orelse)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            consume_uses(stmt.iter)
+            bind_targets([stmt.target], stmt.iter)
+            run_block(stmt.body)        # twice: catches cross-iteration
+            run_block(stmt.body)        # reuse without a split
+            run_block(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            consume_uses(stmt.test)
+            run_block(stmt.body)
+            run_block(stmt.body)
+            run_block(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                consume_uses(item.context_expr)
+            return run_block(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            run_block(stmt.body)
+            for h in stmt.handlers:
+                run_block(h.body)
+            run_block(stmt.orelse)
+            run_block(stmt.finalbody)
+        elif isinstance(stmt, (ast.Return, ast.Raise)):
+            for v in ast.iter_child_nodes(stmt):
+                consume_uses(v)
+            return True
+        elif isinstance(stmt, (ast.Break, ast.Continue)):
+            return True
+        elif isinstance(stmt, (ast.Expr, ast.Assert, ast.Delete)):
+            for v in ast.iter_child_nodes(stmt):
+                consume_uses(v)
+        else:
+            consume_uses(stmt)
+        return False
+
+    def run_block(stmts) -> bool:
+        exits = False
+        for s in stmts:
+            exits = run_stmt(s) or exits
+        return exits
+
+    run_block(fn.body)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# L002 — tracer-in-host-control-flow
+# ---------------------------------------------------------------------------
+
+
+@checker("L002")
+def check_tracer_host_flow(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    scan_bodies = scan_body_names(sf.tree)
+    for fn, _cls in iter_functions(sf.tree):
+        is_jit, static = jit_info(fn)
+        if not is_jit and fn.name not in scan_bodies:
+            continue
+        tainted = {n for n in param_names(fn)
+                   if n not in static and n != "self" and n != "_"}
+        _propagate_taint(fn, tainted)
+        findings.extend(_l002_flag(sf, fn, tainted))
+    return findings
+
+
+def _propagate_taint(fn: ast.AST, tainted: Set[str]) -> None:
+    """Fixpoint over simple assignments: names bound to tainted
+    expressions become tainted."""
+    for _ in range(8):
+        grew = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                targets, value = node.targets, node.value
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                targets, value = [node.target], node.value
+            else:
+                continue
+            if value is None or not expr_tainted(value, tainted):
+                continue
+            for t in targets:
+                names = [t] if isinstance(t, ast.Name) else [
+                    el for el in getattr(t, "elts", [])
+                    if isinstance(el, ast.Name)]
+                for n in names:
+                    if n.id not in tainted:
+                        tainted.add(n.id)
+                        grew = True
+        if not grew:
+            return
+
+
+def _l002_flag(sf: SourceFile, fn: ast.AST,
+               tainted: Set[str]) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def emit(line: int, what: str) -> None:
+        findings.append(Finding(
+            sf.path, line, "L002",
+            f"{what} on a value traced from {fn.name}()'s parameters — "
+            f"host control flow inside jit sees a Tracer, not data"))
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            if expr_tainted(node.test, tainted):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                emit(node.lineno, f"Python `{kind}`")
+        elif isinstance(node, ast.IfExp):
+            if expr_tainted(node.test, tainted):
+                emit(node.lineno, "conditional expression")
+        elif isinstance(node, ast.Assert):
+            if expr_tainted(node.test, tainted):
+                emit(node.lineno, "`assert`")
+        elif isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname in ("bool", "int", "float") and node.args:
+                if any(expr_tainted(a, tainted) for a in node.args):
+                    emit(node.lineno, f"`{fname}()`")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# L003 — impure-strategy-state
+# ---------------------------------------------------------------------------
+
+_STRATEGY_METHODS = {"init", "ask", "tell"}
+# host APIs with no business inside a pure, jittable strategy step
+_BANNED_CALL_PREFIXES = ("time.", "datetime.", "np.random.", "numpy.random.",
+                        "random.")
+_BANNED_CALL_NAMES = {"print", "perf_counter", "monotonic", "input", "open"}
+
+
+def _strategy_classes(tree: ast.AST) -> Set[str]:
+    """Classes participating in the SearchStrategy protocol, minus the
+    host-loop adapters (``Host*``): their init/ask/tell must be pure
+    jittable pytree transforms."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        bases = {dotted_name(b).split(".")[-1] for b in node.bases}
+        if ("SearchStrategy" in bases or "Strategy" in bases) \
+                and not node.name.startswith("Host"):
+            out.add(node.name)
+    return out
+
+
+@checker("L003")
+def check_impure_strategy_state(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    strategy_classes = _strategy_classes(sf.tree)
+    scan_bodies = scan_body_names(sf.tree)
+    for fn, cls in iter_functions(sf.tree):
+        in_strategy = (cls in strategy_classes
+                       and fn.name in _STRATEGY_METHODS)
+        in_scan = fn.name in scan_bodies
+        if not in_strategy and not in_scan:
+            continue
+        where = (f"{cls}.{fn.name}" if in_strategy
+                 else f"scan body {fn.name}")
+        tainted = {n for n in param_names(fn) if n != "self"}
+        _propagate_taint(fn, tainted)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    base = t
+                    while isinstance(base, ast.Subscript):
+                        base = base.value
+                    if isinstance(base, ast.Attribute) \
+                            and isinstance(base.value, ast.Name) \
+                            and base.value.id == "self":
+                        findings.append(Finding(
+                            sf.path, node.lineno, "L003",
+                            f"mutation of self.{base.attr} in {where} — "
+                            f"strategy state must live in the pytree "
+                            f"state, not on the object"))
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                findings.append(Finding(
+                    sf.path, node.lineno, "L003",
+                    f"{type(node).__name__.lower()} write in {where}"))
+            elif isinstance(node, ast.Call):
+                fname = dotted_name(node.func)
+                tail = fname.split(".")[-1]
+                if fname.startswith(_BANNED_CALL_PREFIXES) \
+                        or fname in _BANNED_CALL_NAMES:
+                    findings.append(Finding(
+                        sf.path, node.lineno, "L003",
+                        f"host API `{fname}()` in {where} — impure "
+                        f"under jit (runs at trace time, not per step)"))
+                elif tail == "__setattr__" and fname.startswith("object."):
+                    findings.append(Finding(
+                        sf.path, node.lineno, "L003",
+                        f"object.__setattr__ in {where} — frozen-"
+                        f"dataclass mutation is still mutation"))
+                elif tail == "item" and not node.args and not node.keywords:
+                    if expr_tainted(node.func, tainted):
+                        findings.append(Finding(
+                            sf.path, node.lineno, "L003",
+                            f"`.item()` on a traced value in {where} — "
+                            f"forces a host sync / fails under jit"))
+                elif fname in ("float", "bool") and node.args:
+                    if any(expr_tainted(a, tainted) for a in node.args):
+                        findings.append(Finding(
+                            sf.path, node.lineno, "L003",
+                            f"`{fname}()` on a traced value in {where}"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# L004 — unlocked-shared-mutation
+# ---------------------------------------------------------------------------
+
+_MUTATOR_METHODS = {"append", "appendleft", "extend", "insert", "add",
+                    "remove", "discard", "pop", "popleft", "popitem",
+                    "clear", "update", "setdefault", "move_to_end",
+                    "sort", "reverse"}
+
+
+@checker("L004")
+def check_unlocked_shared_mutation(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.ClassDef):
+            findings.extend(_l004_class(sf, node))
+    return findings
+
+
+def _l004_class(sf: SourceFile, cls: ast.ClassDef) -> List[Finding]:
+    # locked attribute declarations inside this class's line span
+    end = max((getattr(n, "end_lineno", cls.lineno) or cls.lineno
+               for n in ast.walk(cls)), default=cls.lineno)
+    decls: Dict[str, str] = {}
+    for node in ast.walk(cls):
+        if not isinstance(node, (ast.Assign, ast.AnnAssign)):
+            continue
+        lock = sf.locked_decls.get(node.lineno)
+        if lock is None and getattr(node, "end_lineno", None):
+            for ln in range(node.lineno, node.end_lineno + 1):
+                lock = sf.locked_decls.get(ln)
+                if lock:
+                    break
+        if not lock:
+            continue
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        for t in targets:
+            if isinstance(t, ast.Attribute) \
+                    and isinstance(t.value, ast.Name) \
+                    and t.value.id == "self":
+                decls[t.attr] = lock
+            elif isinstance(t, ast.Name):
+                decls[t.id] = lock
+    if not decls:
+        return []
+
+    findings: List[Finding] = []
+    for item in cls.body:
+        if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if item.name == "__init__":
+                continue               # construction precedes sharing
+            held = set(sf.holds_for(item))
+            _l004_walk(sf, item.body, decls, held, item.name, findings)
+    return findings
+
+
+def _l004_walk(sf: SourceFile, stmts, decls: Dict[str, str],
+               held: Set[str], method: str,
+               findings: List[Finding]) -> None:
+    for stmt in stmts:
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            newly = set()
+            for it in stmt.items:
+                name = dotted_name(it.context_expr)
+                if name.startswith("self."):
+                    newly.add(name[len("self."):])
+                elif name:
+                    newly.add(name)
+            _l004_walk(sf, stmt.body, decls, held | newly, method, findings)
+            continue
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        _l004_check_stmt(sf, stmt, decls, held, method, findings)
+        for field in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, field, None)
+            if sub:
+                _l004_walk(sf, sub, decls, held, method, findings)
+        for h in getattr(stmt, "handlers", []) or []:
+            _l004_walk(sf, h.body, decls, held, method, findings)
+
+
+def _l004_check_stmt(sf: SourceFile, stmt: ast.AST,
+                     decls: Dict[str, str], held: Set[str], method: str,
+                     findings: List[Finding]) -> None:
+    def emit(line: int, attr: str) -> None:
+        lock = decls[attr]
+        findings.append(Finding(
+            sf.path, line, "L004",
+            f"write to self.{attr} (declared @locked:{lock}) in "
+            f"{method}() outside `with self.{lock}:` — mark the method "
+            f"@holds:{lock} if the caller owns the lock"))
+
+    def locked_attr_of(t: ast.AST) -> Optional[str]:
+        base = t
+        while isinstance(base, ast.Subscript):
+            base = base.value
+        if isinstance(base, ast.Attribute) \
+                and isinstance(base.value, ast.Name) \
+                and base.value.id == "self" and base.attr in decls:
+            return base.attr
+        return None
+
+    if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+        targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                   else [stmt.target])
+        for t in targets:
+            attr = locked_attr_of(t)
+            if attr is not None and decls[attr] not in held:
+                emit(stmt.lineno, attr)
+    elif isinstance(stmt, ast.Delete):
+        for t in stmt.targets:
+            attr = locked_attr_of(t)
+            if attr is not None and decls[attr] not in held:
+                emit(stmt.lineno, attr)
+    # mutating method calls on a locked attribute — scan only this
+    # statement's own expressions (compound statements recurse through
+    # _l004_walk so nested `with lock:` bodies keep their held set)
+    if isinstance(stmt, (ast.If, ast.While)):
+        roots: List[ast.AST] = [stmt.test]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        roots = [stmt.iter]
+    elif isinstance(stmt, ast.Try):
+        roots = []
+    else:
+        roots = [stmt]
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Call) and isinstance(node.func,
+                                                         ast.Attribute):
+                if node.func.attr not in _MUTATOR_METHODS:
+                    continue
+                attr = locked_attr_of(node.func.value)
+                if attr is not None and decls[attr] not in held:
+                    emit(node.lineno, attr)
+
+
+# ---------------------------------------------------------------------------
+# L005 — fingerprint-dtype-drift
+# ---------------------------------------------------------------------------
+
+
+def _in_digest_scope(sf: SourceFile, fn: ast.AST) -> bool:
+    norm = sf.path.replace("\\", "/")
+    if norm.endswith("memo/fingerprint.py"):
+        return True
+    name = fn.name.lower()
+    return "fingerprint" in name or "digest" in name
+
+
+def _has_le_astype(node: ast.AST) -> bool:
+    """Whether the value chain under ``.tobytes()`` pins an explicit
+    little-endian dtype via ``.astype("<..")``."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute) \
+                and sub.func.attr == "astype" and sub.args:
+            a = sub.args[0]
+            if isinstance(a, ast.Constant) and isinstance(a.value, str) \
+                    and a.value.startswith("<"):
+                return True
+    return False
+
+
+@checker("L005")
+def check_fingerprint_dtype_drift(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    for fn, _cls in iter_functions(sf.tree):
+        if not _in_digest_scope(sf, fn):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = dotted_name(node.func)
+            if fname == "hash":
+                findings.append(Finding(
+                    sf.path, node.lineno, "L005",
+                    f"builtin hash() feeding {fn.name}() — salted per "
+                    f"process (PYTHONHASHSEED); digest bits would change "
+                    f"across runs"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "tobytes":
+                if not _has_le_astype(node.func.value):
+                    findings.append(Finding(
+                        sf.path, node.lineno, "L005",
+                        f".tobytes() without an explicit little-endian "
+                        f".astype('<f4'/'<i4'/'<u4') in {fn.name}() — "
+                        f"raw buffers drift with input dtype and native "
+                        f"byte order"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args:
+                a = node.args[0]
+                byte_order_free = (
+                    isinstance(a, ast.Constant)
+                    and isinstance(a.value, str)
+                    and not a.value.startswith("<"))
+                if byte_order_free:
+                    findings.append(Finding(
+                        sf.path, node.lineno, "L005",
+                        f".astype({a.value!r}) in {fn.name}() leaves "
+                        f"byte order native — use the '<'-prefixed "
+                        f"little-endian spelling for digest inputs"))
+    return findings

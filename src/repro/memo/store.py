@@ -54,6 +54,11 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+try:
+    import fcntl
+except ImportError:          # non-POSIX: appends fall back to the
+    fcntl = None             # inode-check + compaction-rescue path
+
 _COMPACT_SLACK = 4          # compact when events > live records * this
 
 
@@ -102,13 +107,13 @@ class MemoStore:
         self.byte_budget = byte_budget
         self._lock = threading.RLock()
         # fingerprint -> MemoRecord, LRU order (last = most recent)
-        self._records: "OrderedDict[str, MemoRecord]" = OrderedDict()
+        self._records: "OrderedDict[str, MemoRecord]" = OrderedDict()  # @locked:_lock
         # family -> [fingerprint] (insertion order; rebuilt on load)
-        self._families: Dict[Tuple, List[str]] = {}
-        self._bytes = 0
-        self._index_events = 0       # lines in index.jsonl (live + dead)
-        self._index_pos = 0          # bytes of index consumed by refresh
-        self._index_ino = None       # inode those bytes came from
+        self._families: Dict[Tuple, List[str]] = {}  # @locked:_lock
+        self._bytes = 0              # @locked:_lock
+        self._index_events = 0       # @locked:_lock  index lines (live+dead)
+        self._index_pos = 0          # @locked:_lock  bytes consumed by refresh
+        self._index_ino = None       # @locked:_lock  inode those bytes came from
         if self.path:
             os.makedirs(os.path.join(self.path, "payload"), exist_ok=True)
             self.refresh()
@@ -121,14 +126,47 @@ class MemoStore:
         return os.path.join(self.path, "payload", f"{fp}.npz")
 
     # -- disk primitives ------------------------------------------------------
-    def _append_line(self, obj: Dict) -> None:
-        line = (json.dumps(obj, separators=(",", ":")) + "\n").encode()
-        fd = os.open(self._index_path(),
-                     os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    @staticmethod
+    def _flock(fd: int, op: int) -> bool:
+        """Best-effort advisory lock; False when the platform or the
+        filesystem doesn't support it (callers degrade gracefully)."""
+        if fcntl is None:
+            return False
         try:
-            os.write(fd, line)      # one small O_APPEND write: atomic
-        finally:
-            os.close(fd)
+            fcntl.flock(fd, op)
+            return True
+        except OSError:
+            return False
+
+    def _append_line(self, obj: Dict) -> None:
+        """Append one index line (atomic O_APPEND write).  @holds:_lock"""
+        line = (json.dumps(obj, separators=(",", ":")) + "\n").encode()
+        while True:
+            fd = os.open(self._index_path(),
+                         os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+            locked = False
+            try:
+                # shared lock + liveness check close the compaction
+                # window: a concurrent _compact_locked holds the
+                # exclusive lock on the live inode across its
+                # refresh->replace, so once WE hold the shared lock on
+                # an fd that still IS the path's inode, the compactor
+                # either already consumed our line or cannot replace
+                # until we finish writing.  A write that would land on
+                # a dead (just-replaced) inode retries on the new file.
+                locked = self._flock(fd, fcntl.LOCK_SH if fcntl else 0)
+                try:
+                    st_path = os.stat(self._index_path())
+                except FileNotFoundError:
+                    continue                     # mid-replace: retry
+                if st_path.st_ino != os.fstat(fd).st_ino:
+                    continue                     # dead inode: reopen
+                os.write(fd, line)  # one small O_APPEND write: atomic
+                break
+            finally:
+                if locked:
+                    fcntl.flock(fd, fcntl.LOCK_UN)
+                os.close(fd)
         # deliberately do NOT advance _index_pos: with O_APPEND this line
         # may land after other processes' lines we have not consumed yet,
         # and skipping len(line) bytes from the old cursor would start
@@ -158,6 +196,7 @@ class MemoStore:
 
     # -- in-memory index maintenance ------------------------------------------
     def _insert(self, rec: MemoRecord) -> None:
+        """@holds:_lock"""
         old = self._records.pop(rec.fingerprint, None)
         if old is not None:
             self._bytes -= old.nbytes
@@ -167,6 +206,7 @@ class MemoStore:
         self._bytes += rec.nbytes
 
     def _forget_family(self, rec: MemoRecord) -> None:
+        """@holds:_lock"""
         fps = self._families.get(rec.family)
         if fps is not None:
             try:
@@ -177,6 +217,7 @@ class MemoStore:
                 del self._families[rec.family]
 
     def _drop(self, fp: str, tombstone: bool) -> None:
+        """@holds:_lock"""
         rec = self._records.pop(fp, None)
         if rec is None:
             return
@@ -191,6 +232,7 @@ class MemoStore:
                 self._append_line({"op": "del", "fp": fp})
 
     def _evict_over_budget(self) -> None:
+        """@holds:_lock"""
         if self.byte_budget is None:
             return
         while self._bytes > self.byte_budget and len(self._records) > 1:
@@ -305,11 +347,19 @@ class MemoStore:
                         self._forget_family(rec)
                 elif ev.get("op") == "put":
                     live = self._records.get(ev["fp"])
-                    if live is not None and live.nbytes == ev.get("nbytes"):
-                        # our own (or an identical) line re-read: records
-                        # are content-addressed, so same fingerprint +
-                        # same size means same payload — skip the
-                        # redundant npz load and leave LRU recency alone
+                    if (live is not None
+                            and live.nbytes == ev.get("nbytes")
+                            and live.meta == ev.get("meta", {})
+                            and live.family == tuple(ev["family"])):
+                        # our own (or an identical) line re-read: skip
+                        # the redundant npz load and leave LRU recency
+                        # alone.  The line must be indistinguishable
+                        # from the live record — size alone is NOT
+                        # enough (a same-size overwrite with different
+                        # meta would silently keep the stale meta,
+                        # which the repro.lint.race harness catches);
+                        # same fp + size + family + meta means the same
+                        # content-addressed record.
                         continue
                     arrays = self._load_payload(ev["fp"])
                     if arrays is None:
@@ -331,6 +381,7 @@ class MemoStore:
                                # is a dead process's leftover
 
     def _compact_locked(self) -> None:
+        """@holds:_lock (cross-process exclusion via the lock file)"""
         lockfile = os.path.join(self.path, "compact.lock")
         try:
             fd = os.open(lockfile, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
@@ -356,25 +407,78 @@ class MemoStore:
             except (FileNotFoundError, FileExistsError, OSError):
                 return          # lost the reclaim race: skip this round
         try:
+            os.close(fd)
+            # hold an fd on the OLD index inode across the replace: a
+            # line another process appends inside the snapshot->replace
+            # window lands on this inode, not the new file, and without
+            # the fd it would vanish with the inode.  A lost "put" only
+            # costs a recomputation, but a lost "del" tombstone would
+            # RESURRECT an evicted record on the next rebuild.  Where
+            # flock works, the exclusive lock closes the window outright
+            # (appenders hold a shared lock while writing and retry onto
+            # the new file when their inode dies); the tail rescue below
+            # covers no-flock filesystems.
+            try:
+                old = open(self._index_path(), "rb")
+            except FileNotFoundError:
+                old = None
+            ex_locked = (old is not None
+                         and self._flock(old.fileno(),
+                                         fcntl.LOCK_EX if fcntl else 0))
             # fold in index lines other processes appended since our
             # last refresh BEFORE snapshotting: the rewrite below keeps
             # exactly self._records, and anything unseen would otherwise
-            # be dropped from the index (orphaning its payloads)
+            # be dropped from the index (orphaning its payloads).  Under
+            # the exclusive lock this read is complete — no appender can
+            # land another line on this inode until we release.
             self.refresh()
-            os.close(fd)
-            fd2, tmp = tempfile.mkstemp(dir=self.path, suffix=".idx")
-            with os.fdopen(fd2, "w") as f:
-                for rec in self._records.values():
-                    f.write(json.dumps(
-                        {"op": "put", "fp": rec.fingerprint,
-                         "family": list(rec.family), "meta": rec.meta,
-                         "nbytes": rec.nbytes},
-                        separators=(",", ":")) + "\n")
-            os.replace(tmp, self._index_path())
-            st = os.stat(self._index_path())
-            self._index_pos = st.st_size
-            self._index_ino = st.st_ino
-            self._index_events = len(self._records)
+            snap_pos = self._index_pos      # refresh() consumed up to here
+            try:
+                fd2, tmp = tempfile.mkstemp(dir=self.path, suffix=".idx")
+                try:
+                    with os.fdopen(fd2, "w") as f:
+                        for rec in self._records.values():
+                            f.write(json.dumps(
+                                {"op": "put", "fp": rec.fingerprint,
+                                 "family": list(rec.family),
+                                 "meta": rec.meta, "nbytes": rec.nbytes},
+                                separators=(",", ":")) + "\n")
+                        f.flush()
+                        # cursor from the tmp fd BEFORE the replace:
+                        # stat()ing the path afterwards would also count
+                        # bytes other processes append to the new index
+                        # in between, and skipping those on the next
+                        # refresh() would silently miss their records
+                        st = os.fstat(f.fileno())
+                except BaseException:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+                    raise
+                os.replace(tmp, self._index_path())
+                self._index_pos = st.st_size
+                self._index_ino = st.st_ino
+                self._index_events = len(self._records)
+                # rescue the window: replay every complete line appended
+                # to the old inode after our snapshot cursor onto the
+                # new index (O_APPEND writes are whole lines, so the
+                # tail parses cleanly; _append_line leaves _index_pos
+                # alone, so the next refresh() folds them into memory)
+                if old is not None:
+                    old.seek(snap_pos)
+                    for raw in old.read().splitlines():
+                        raw = raw.strip()
+                        if not raw:
+                            continue
+                        try:
+                            ev = json.loads(raw)
+                        except json.JSONDecodeError:
+                            continue
+                        self._append_line(ev)
+            finally:
+                if old is not None:
+                    if ex_locked:
+                        fcntl.flock(old.fileno(), fcntl.LOCK_UN)
+                    old.close()
         finally:
             try:
                 os.unlink(lockfile)

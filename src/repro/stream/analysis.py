@@ -112,7 +112,7 @@ class AnalysisPool:
                                         initializer=_deprioritize_worker)
         # keyed by (setting name, flexible flag) — one shared cache per
         # cost-model flavor of each accelerator
-        self._analyzers: Dict[Tuple[str, bool], JobAnalyzer] = {}
+        self._analyzers: Dict[Tuple[str, bool], JobAnalyzer] = {}  # @locked:_lock
         self._lock = threading.Lock()
         self._clock = clock or time.perf_counter
 

@@ -56,6 +56,7 @@ from repro.core.magma import MagmaConfig, SearchResult
 from repro.core.pareto import ParetoFront, pareto_front
 from repro.core.strategies import SearchStrategy, WarmStart, plan_generations
 from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
+from repro.lint.runtime import transfer_sanitizer
 from repro.stream.analysis import AnalysisPool, ReadyScenario
 from repro.stream.metrics import StreamMetrics, compute_metrics
 from repro.stream.workloads import ScenarioRequest, TraceConfig, generate_trace
@@ -109,6 +110,15 @@ class StreamConfig:
                       rows: the interim is bit-identical to a standalone
                       search at the anytime budget, the refinement to
                       one at the full budget.  None disables the split
+    transfer_guard    run dispatch/route device regions under
+                      ``jax.transfer_guard("disallow")``
+                      (``repro.lint.runtime``): every intended transfer
+                      is an explicit ``device_put``/``device_get``, so
+                      an implicit host<->device copy sneaking onto the
+                      hot path raises instead of silently syncing.
+                      Host-side batch assembly (key/param stacking)
+                      happens before the guarded region.  Off by
+                      default (sanitizer, not behavior)
     """
     batch_rows: int = 8
     analysis_workers: int = 2
@@ -119,6 +129,7 @@ class StreamConfig:
     slo_aware: bool = True
     slo_margin_s: float = 0.05
     anytime_budget: Optional[int] = None
+    transfer_guard: bool = False
 
     def __post_init__(self):
         for field in ("batch_rows", "analysis_workers", "max_inflight"):
@@ -299,8 +310,8 @@ class StreamingScheduler:
         self.pool = AnalysisPool(self.stream.analysis_workers,
                                  clock=self._clock)
         self.last_metrics: Optional[StreamMetrics] = None
-        self.last_batches: List[_BatchRecord] = []
-        self._refined = 0            # anytime refinements routed-less
+        self.last_batches: List[_BatchRecord] = []   # @locked:_run_lock
+        self._refined = 0            # @locked:_run_lock  silent refinements
 
         # one run at a time: the clock zero, batch records, and metrics
         # are per-run state, so concurrent clients (several engines
@@ -430,8 +441,6 @@ class StreamingScheduler:
         fn, target = row_executable(
             strategy, generations, evolve_last, G, use_kernel, objective,
             ndev, keep_population=self._keep_population(base), warm=is_warm)
-        keys_d = jax.device_put(keys, target)
-        params_d = jax.device_put(params, target)
         if is_warm:
             warm = WarmStart(
                 accel=np.stack([np.asarray(m.warm.accel) for m in members]),
@@ -439,9 +448,15 @@ class StreamingScheduler:
                 jitter=np.asarray([m.warm.jitter for m in members],
                                   dtype=np.float32))
             warm, _ = _pad_rows(warm, keys[:len(members)], padded)
-            out = fn(keys_d, params_d, jax.device_put(warm, target))
-        else:
-            out = fn(keys_d, params_d)  # async dispatch: returns immediately
+        # batch assembly above is pure host numpy; only the transfers +
+        # launch below run under the (optional) disallow guard
+        with transfer_sanitizer(self.stream.transfer_guard):
+            keys_d = jax.device_put(keys, target)
+            params_d = jax.device_put(params, target)
+            if is_warm:
+                out = fn(keys_d, params_d, jax.device_put(warm, target))
+            else:
+                out = fn(keys_d, params_d)  # async: returns immediately
         return _Inflight(out=out, members=members, dispatch_s=self._clock(),
                          padded_rows=padded, num_devices=ndev,
                          compat_key=compat_key)
@@ -461,9 +476,11 @@ class StreamingScheduler:
                              strategy=self._resolve_override(p.strategy))
 
     def _route(self, inf: _Inflight, results: List[StreamResult]) -> None:
-        jax.block_until_ready(inf.out)
-        done = self._clock()
-        outs = [np.asarray(o) for o in inf.out]
+        """Fetch a finished batch and route rows.  @holds:_run_lock"""
+        with transfer_sanitizer(self.stream.transfer_guard):
+            jax.block_until_ready(inf.out)
+            done = self._clock()
+            outs = [jax.device_get(o) for o in inf.out]
         bf, ba, bp, hist = outs[:4]
         pops = outs[4:6] if len(outs) >= 6 else None
         base, _, A, _, _, budget, is_warm = inf.compat_key
@@ -521,6 +538,7 @@ class StreamingScheduler:
             return self._run(requests, prepared)
 
     def _run(self, requests, prepared) -> List[StreamResult]:
+        """The pipeline body (entered by ``run()``).  @holds:_run_lock"""
         self._t0 = time.perf_counter()
         self.last_batches = []
         self._refined = 0
@@ -772,6 +790,7 @@ class StreamingScheduler:
             return self._run_serial(requests, shared_cache)
 
     def _run_serial(self, requests, shared_cache) -> List[StreamResult]:
+        """Serial baseline body (``run_serial()``).  @holds:_run_lock"""
         self._t0 = time.perf_counter()
         self.last_batches = []
         self._refined = 0          # serial baseline: no anytime splits

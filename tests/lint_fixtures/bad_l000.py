@@ -1,0 +1,9 @@
+"""L000 fixture: pragmas that don't parse (missing mandatory reason)."""
+import jax
+
+
+def sloppy(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))  # lint: disable=L001
+    c = jax.random.normal(key, (4,))  # lint: disable=L001()
+    return a, b, c

@@ -1,0 +1,15 @@
+"""L001 fixture: the same PRNG key drawn from twice without a split."""
+import jax
+
+
+def correlated_tables(key, G, A):
+    lat = jax.random.uniform(key, (G, A))
+    bw = jax.random.uniform(key, (G, A))      # reuse: bw == f(lat's key)
+    return lat, bw
+
+
+def loop_reuse(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.normal(key, (4,)))   # same bits every turn
+    return out

@@ -1,0 +1,21 @@
+"""L002 fixture: Python control flow on values traced from jit params."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clamp_if_large(x):
+    if x.sum() > 10.0:                 # Tracer truthiness: trace-time error
+        return jnp.clip(x, 0.0, 1.0)
+    return x
+
+
+@partial(jax.jit, static_argnames=("iters",))
+def iterate(x, iters):
+    total = x * 2.0
+    while bool(total.max()) and iters > 0:   # bool() on a tracer
+        total = total - 1.0
+        iters -= 1
+    return total

@@ -1,0 +1,24 @@
+"""L003 fixture: impure state and host APIs inside strategy steps."""
+import time
+
+import numpy as np
+
+from repro.core.strategies.base import SearchStrategy
+
+
+class LeakyStrategy(SearchStrategy):
+    """Keeps fitness history on the object and consults host clocks."""
+
+    name = "leaky"
+
+    def init(self, key, params, *, init_population=None):
+        self.started_at = time.time()        # host clock + self mutation
+        return {"key": key}
+
+    def ask(self, state):
+        jitter = np.random.standard_normal(4)    # host RNG inside a step
+        return state, jitter, jitter
+
+    def tell(self, state, fitness):
+        self.best = float(fitness.max())     # float() on a traced value
+        return state

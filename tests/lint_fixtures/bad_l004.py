@@ -1,0 +1,23 @@
+"""L004 fixture: writes to @locked attributes outside the lock."""
+import threading
+
+
+class Cache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache = {}          # @locked:_lock
+        self._hits = 0            # @locked:_lock
+
+    def get(self, k):
+        with self._lock:
+            v = self._cache.get(k)
+        if v is not None:
+            self._hits += 1       # outside the with-block: racy increment
+        return v
+
+    def put(self, k, v):
+        self._cache[k] = v        # no lock at all
+
+    def clear(self):
+        with self._lock:
+            self._cache.clear()   # fine: held

@@ -1,0 +1,13 @@
+"""L005 fixture: byte-order / hash-seed dependent digest inputs."""
+import hashlib
+
+import numpy as np
+
+
+def scenario_digest(tables, meta):
+    sha = hashlib.sha256()
+    for leaf in tables:
+        sha.update(np.asarray(leaf).tobytes())     # native dtype + order
+    sha.update(np.asarray(meta, dtype=np.int64).astype("int64").tobytes())
+    sha.update(str(hash(("v1", len(tables)))).encode())   # PYTHONHASHSEED
+    return sha.hexdigest()

@@ -1,0 +1,48 @@
+"""Clean fixture: the disciplined versions of every bad pattern, plus a
+well-formed pragma — strict lint over this file must report nothing."""
+import hashlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def independent_tables(key, G, A):
+    k1, k2 = jax.random.split(key)
+    lat = jax.random.uniform(k1, (G, A))
+    bw = jax.random.uniform(k2, (G, A))
+    return lat, bw
+
+
+def deliberate_reuse(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(key, (4,))  # lint: disable=L001(identical draws on purpose: testing determinism)
+    return a, b
+
+
+@jax.jit
+def clamp(x):
+    return jnp.where(x.sum() > 10.0, jnp.clip(x, 0.0, 1.0), x)
+
+
+class Cache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache = {}          # @locked:_lock
+
+    def put(self, k, v):
+        with self._lock:
+            self._cache[k] = v
+
+    def _insert(self, k, v):
+        """Insert without re-acquiring.  @holds:_lock"""
+        self._cache[k] = v
+
+
+def scenario_digest(tables):
+    sha = hashlib.sha256()
+    for leaf in tables:
+        sha.update(np.asarray(leaf, dtype=np.float32)
+                   .astype("<f4").tobytes())
+    return sha.hexdigest()

@@ -15,8 +15,8 @@ from repro.kernels import ops, ref
                                    (3, 100, 16), (1, 7, 3)])
 def test_makespan_matches_simulation(P, G, A):
     key = jax.random.PRNGKey(P * 1000 + G)
-    pop = random_population(key, P, G, A)
-    k1, k2 = jax.random.split(key)
+    kp, k1, k2 = jax.random.split(key, 3)
+    pop = random_population(kp, P, G, A)
     lat = jax.random.uniform(k1, (G, A), minval=0.05, maxval=5.0)
     bw = jax.random.uniform(k2, (G, A), minval=0.01, maxval=10.0)
     for bw_sys in (0.5, 4.0, 1e6):
@@ -31,8 +31,8 @@ def test_makespan_pop_blocks(pop_block):
     from repro.kernels.makespan import makespan_pallas
     key = jax.random.PRNGKey(7)
     P, G, A = 10, 24, 4
-    pop = random_population(key, P, G, A)
-    k1, k2 = jax.random.split(key)
+    kp, k1, k2 = jax.random.split(key, 3)
+    pop = random_population(kp, P, G, A)
     lat = jax.random.uniform(k1, (G, A), minval=0.1, maxval=2.0)
     bw = jax.random.uniform(k2, (G, A), minval=0.1, maxval=2.0)
     a = ops.population_makespan(pop.accel, pop.prio, lat, bw, 2.0, A)

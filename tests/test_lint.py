@@ -1,0 +1,295 @@
+"""repro.lint static analyzer: checkers, pragmas, fixtures, self-hosting.
+
+The fixture files under ``tests/lint_fixtures/`` are the checker
+contract: each ``bad_lXXX.py`` must trip exactly its rule (and strict
+CLI must exit nonzero naming it), ``good.py`` must be silent.  The
+self-hosting tests pin the repo itself lint-clean, which is what lets
+CI run ``--strict`` — any regression that introduces a real finding (or
+a checker change that introduces a false positive) fails here first.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.lint import lint_text, run as lint_run
+from repro.lint.core import RULES
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIXTURES = os.path.join(HERE, "lint_fixtures")
+SRC = os.path.join(REPO, "src")
+
+
+def _lint(code, select=None):
+    return lint_text("<test>", textwrap.dedent(code), select=select)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# checker units
+# ---------------------------------------------------------------------------
+def test_l001_flags_key_reuse_and_respects_split():
+    bad = _lint("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))
+            return a, b
+    """)
+    assert _rules(bad) == ["L001"]
+    good = _lint("""
+        import jax
+        def f(key):
+            k1, k2 = jax.random.split(key)
+            return jax.random.normal(k1, (4,)), jax.random.normal(k2, (4,))
+    """)
+    assert good == []
+
+
+def test_l001_branch_merge_no_false_positive():
+    # consumption on an early-return path must not leak into the
+    # fall-through path (the repro.memo.engine._key_data shape)
+    good = _lint("""
+        import numpy as np
+        def canon(seed_or_key):
+            if isinstance(seed_or_key, int):
+                return int(seed_or_key)
+            return np.asarray(seed_or_key)
+    """)
+    assert good == []
+
+
+def test_l002_tracer_in_host_control_flow():
+    bad = _lint("""
+        import jax
+        @jax.jit
+        def f(x):
+            if x.sum() > 10.0:
+                return x * 0.5
+            return x
+    """)
+    assert "L002" in _rules(bad)
+    # static args are host values: branching on them is fine
+    good = _lint("""
+        from functools import partial
+        import jax
+        @partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode == "double":
+                return x * 2
+            return x
+    """)
+    assert good == []
+
+
+def test_l003_impure_strategy_state():
+    bad = _lint("""
+        import time
+        from repro.core.strategies import SearchStrategy
+        class Leaky(SearchStrategy):
+            def ask(self, state, key):
+                self.t = time.time()
+                return state
+    """)
+    assert "L003" in _rules(bad)
+
+
+def test_l004_needs_lock_or_holds():
+    bad = _lint("""
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache = {}   # @locked:_lock
+            def put(self, k, v):
+                self._cache[k] = v
+    """)
+    assert _rules(bad) == ["L004"]
+    good = _lint("""
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache = {}   # @locked:_lock
+            def put(self, k, v):
+                with self._lock:
+                    self._cache[k] = v
+            def _insert(self, k, v):
+                '''@holds:_lock'''
+                self._cache[k] = v
+    """)
+    assert good == []
+
+
+def test_l004_nested_with_keeps_held_set():
+    good = _lint("""
+        import threading
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._q = []   # @locked:_lock
+            def push(self, xs):
+                with self._lock:
+                    for x in xs:
+                        if x:
+                            self._q.append(x)
+    """)
+    assert good == []
+
+
+def test_l005_digest_discipline():
+    bad = _lint("""
+        import hashlib, numpy as np
+        def fingerprint(x):
+            return hashlib.sha256(np.asarray(x).tobytes()).hexdigest()
+    """)
+    assert "L005" in _rules(bad)
+    good = _lint("""
+        import hashlib, numpy as np
+        def fingerprint(x):
+            b = np.asarray(x, dtype=np.float32).astype("<f4").tobytes()
+            return hashlib.sha256(b).hexdigest()
+    """)
+    assert good == []
+
+
+def test_syntax_error_is_e999_not_crash():
+    assert _rules(_lint("def f(:\n    pass")) == ["E999"]
+
+
+# ---------------------------------------------------------------------------
+# pragmas
+# ---------------------------------------------------------------------------
+def test_pragma_with_reason_suppresses():
+    code = """
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))  # lint: disable=L001(determinism check)
+            return a, b
+    """
+    assert _lint(code) == []
+
+
+def test_pragma_on_preceding_line_suppresses():
+    code = """
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            # lint: disable=L001(determinism check)
+            b = jax.random.normal(key, (4,))
+            return a, b
+    """
+    assert _lint(code) == []
+
+
+def test_pragma_without_reason_is_l000_and_does_not_suppress():
+    code = """
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (4,))
+            b = jax.random.normal(key, (4,))  # lint: disable=L001
+            return a, b
+    """
+    assert _rules(_lint(code)) == ["L000", "L001"]
+
+
+def test_l000_is_unsuppressable():
+    code = "x = 1  # lint: disable=L001  # lint: disable=L000(hush)\n"
+    assert "L000" in _rules(_lint(code))
+
+
+def test_pragma_inside_string_literal_is_not_a_pragma():
+    code = 's = "# lint: disable=L001"\n'
+    assert _lint(code) == []
+
+
+# ---------------------------------------------------------------------------
+# fixtures: each bad file trips its rule; good.py is silent
+# ---------------------------------------------------------------------------
+BAD_FIXTURES = ["L000", "L001", "L002", "L003", "L004", "L005"]
+
+
+@pytest.mark.parametrize("rule", BAD_FIXTURES)
+def test_fixture_trips_its_rule(rule):
+    path = os.path.join(FIXTURES, f"bad_{rule.lower()}.py")
+    findings = lint_run([path])
+    assert findings, f"{path} produced no findings"
+    assert any(f.rule == rule for f in findings), \
+        f"{path}: expected {rule}, got {sorted({f.rule for f in findings})}"
+
+
+def test_good_fixture_is_silent():
+    assert lint_run([os.path.join(FIXTURES, "good.py")]) == []
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m", "repro.lint", *args],
+                          capture_output=True, text=True, env=env,
+                          timeout=300)
+
+
+@pytest.mark.parametrize("rule", BAD_FIXTURES)
+def test_cli_strict_exits_nonzero_naming_rule(rule):
+    path = os.path.join(FIXTURES, f"bad_{rule.lower()}.py")
+    proc = _cli(path, "--strict")
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert rule in proc.stdout
+
+
+def test_cli_strict_exits_zero_on_clean_file():
+    proc = _cli(os.path.join(FIXTURES, "good.py"), "--strict")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_select_filters_rules():
+    path = os.path.join(FIXTURES, "bad_l001.py")
+    proc = _cli(path, "--strict", "--select", "L005")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# self-hosting: the repo itself is lint-clean (what CI --strict enforces)
+# ---------------------------------------------------------------------------
+def test_src_and_benchmarks_are_strict_clean():
+    findings = lint_run([SRC, os.path.join(REPO, "benchmarks")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_linter_lints_itself_clean():
+    findings = lint_run([os.path.join(SRC, "repro", "lint")])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_tests_are_clean_outside_fixtures():
+    findings = [f for f in lint_run([HERE])
+                if "lint_fixtures" not in f.path]
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_store_annotations_are_load_bearing():
+    """Stripping @holds from MemoStore must produce L004 findings — the
+    negative control proving the annotations (and checker) are live."""
+    path = os.path.join(SRC, "repro", "memo", "store.py")
+    with open(path) as f:
+        text = f.read()
+    stripped = text.replace('"""@holds:_lock"""', '"""stripped"""')
+    assert stripped != text
+    findings = lint_text(path, stripped)
+    assert any(f.rule == "L004" for f in findings)
+
+
+def test_every_rule_has_a_checker_and_fixture_coverage():
+    from repro.lint import CHECKERS
+    for rule in RULES:
+        if rule in ("E999",):
+            continue
+        assert rule == "L000" or rule in CHECKERS

@@ -1,0 +1,221 @@
+"""Runtime sanitizers + concurrency regressions.
+
+* RecompileGuard: raises naming the executable when a static argument
+  changes after ``warmup()``; zero false positives over a warmed stream
+  run (the contract ``benchmarks/perf_stream.py`` reports on).
+* transfer_sanitizer: implicit host<->device transfers raise inside the
+  scope, explicit device_put/device_get stay allowed, and the guarded
+  sweep/stream hot paths are bit-identical to unguarded runs.
+* MemoStore concurrency: the deterministic compaction-window regression
+  (a line appended mid-compact must survive — a lost ``del`` tombstone
+  would resurrect an evicted record), the refresh staleness regression
+  the race harness surfaced, and the full interleaved ownership race
+  (threads + a subprocess, >= 1000 ops, index exact vs serial replay).
+"""
+import os
+import tempfile
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.memo.store as store_mod
+from repro.lint.race import (analysis_race, eviction_phase, memo_race,
+                             payload, replay_index)
+from repro.lint.runtime import (RecompileError, RecompileGuard,
+                                transfer_sanitizer)
+from repro.memo.store import MemoRecord, MemoStore
+
+
+def _rec(fp, version=0, family=("fam",)):
+    return MemoRecord(fingerprint=fp, family=family,
+                      arrays=payload(0, "w0r0", version),
+                      meta={"v": version})
+
+
+# ---------------------------------------------------------------------------
+# RecompileGuard
+# ---------------------------------------------------------------------------
+def test_recompile_guard_names_offender_on_static_arg_change():
+    @partial(jax.jit, static_argnames=("n",))
+    def scale_rows(x, n):
+        return x * n
+
+    g = RecompileGuard(label="unit")
+    with pytest.raises(RecompileError) as exc:
+        with g:
+            scale_rows(jnp.ones(4), 2)
+            g.warmup()
+            scale_rows(jnp.ones(4), 2)       # cached: fine
+            scale_rows(jnp.ones(4), 3)       # static arg changed
+    msg = str(exc.value)
+    assert "after warmup" in msg and "[unit]" in msg
+    assert "scale_rows" in msg               # the offender is named
+    assert any("scale_rows" in c for c in g.post_warmup)
+
+
+def test_recompile_guard_quiet_when_cached():
+    @jax.jit
+    def f(x):
+        return x + 1
+
+    with RecompileGuard() as g:
+        f(jnp.ones(3))
+        g.warmup()
+        for _ in range(3):
+            f(jnp.ones(3))
+    assert g.post_warmup == []
+    assert g.warmup_compiles          # the warmup compile was observed
+
+
+def test_recompile_guard_observe_only_without_warmup():
+    @jax.jit
+    def g_fn(x):
+        return x * 2.0
+
+    with RecompileGuard() as g:
+        g_fn(jnp.ones(5))             # compiles, but no boundary set
+    assert g.post_warmup == []        # never raises without warmup()
+
+
+def test_recompile_guard_restores_logging_state():
+    import logging
+    from repro.lint.runtime import _COMPILE_LOGGER_NAMES
+    before = [(logging.getLogger(n).level, logging.getLogger(n).propagate)
+              for n in _COMPILE_LOGGER_NAMES]
+    with RecompileGuard():
+        pass
+    after = [(logging.getLogger(n).level, logging.getLogger(n).propagate)
+             for n in _COMPILE_LOGGER_NAMES]
+    assert before == after
+
+
+def test_recompile_guard_zero_false_positives_on_warmed_stream():
+    from repro.stream.service import StreamConfig, StreamingScheduler
+    from repro.stream.workloads import TraceConfig, generate_trace
+    trace = generate_trace(TraceConfig(
+        num_scenarios=6, group_size=10, settings=("S2",),
+        bw_ladder_gb=(1.0, 16.0), seed=11))
+    svc = StreamingScheduler(budget=120,
+                             stream=StreamConfig(batch_rows=4,
+                                                 analysis_workers=1))
+    with RecompileGuard(label="stream") as g:
+        svc.warmup(trace)
+        g.warmup()
+        svc.run(trace)                # every bucket precompiled
+    assert g.post_warmup == [], g.post_warmup
+    assert g.warmup_compiles          # warmup really did compile
+
+
+# ---------------------------------------------------------------------------
+# transfer_sanitizer
+# ---------------------------------------------------------------------------
+def test_transfer_sanitizer_blocks_implicit_allows_explicit():
+    dev = jax.device_put(np.arange(4.0))
+    with transfer_sanitizer(True):
+        y = jax.device_put(np.arange(3.0))        # explicit: fine
+        _ = jax.device_get(dev)                   # explicit: fine
+        _ = jnp.asarray(np.arange(2.0))           # explicit: fine
+        with pytest.raises(Exception, match="[Tt]ransfer"):
+            float(y[0])                           # implicit D2H
+    float(y[0])                                   # outside: fine again
+
+
+def test_transfer_sanitizer_disabled_is_noop():
+    dev = jax.device_put(np.arange(4.0))
+    with transfer_sanitizer(False):
+        assert float(dev[0]) == 0.0               # implicit D2H allowed
+
+
+def test_guarded_hot_paths_bit_identical():
+    from repro.core.fitness import FitnessFn
+    from repro.core.job_analyzer import table_from_arrays
+    from repro.core.magma import MagmaConfig
+    from repro.core.sweep import SweepConfig, run_sweep
+    rng = np.random.default_rng(5)
+    G, A = 10, 3
+    table = table_from_arrays(
+        rng.uniform(1e-4, 5e-3, (G, A)), rng.uniform(1e8, 2e9, (G, A)),
+        flops=rng.uniform(1e9, 1e10, G),
+        energy=rng.uniform(1e-3, 1e-1, (G, A)))
+    fns = [FitnessFn(table, bw_sys=2.0 * 1024 ** 3)]
+    cfg = MagmaConfig(population=12)
+    plain = run_sweep(fns, budget=120, seeds=[0, 1], cfg=cfg,
+                      sweep=SweepConfig(chunk_rows=2))
+    guarded = run_sweep(fns, budget=120, seeds=[0, 1], cfg=cfg,
+                        sweep=SweepConfig(chunk_rows=2, transfer_guard=True))
+    np.testing.assert_array_equal(plain.best_fitness, guarded.best_fitness)
+    np.testing.assert_array_equal(plain.best_accel, guarded.best_accel)
+
+
+# ---------------------------------------------------------------------------
+# MemoStore: compaction window + refresh staleness + the full race
+# ---------------------------------------------------------------------------
+def test_compact_window_rescues_put_and_tombstone(monkeypatch, tmp_path):
+    """A put AND a del appended by another process inside compaction's
+    snapshot->replace window must survive the rewrite.  Lost put = a
+    recomputation; lost tombstone = a RESURRECTED record.  flock is
+    disabled so the injection lands in the window deterministically
+    (with flock the appender would simply block until after replace)."""
+    monkeypatch.setattr(store_mod, "fcntl", None)
+    d = str(tmp_path)
+    s = MemoStore(d)
+    for i in range(3):
+        s.put(_rec(f"r{i}"))
+    other = MemoStore(d)
+
+    real_replace = os.replace
+    fired = {}
+
+    def inject(src, dst, *a, **k):
+        if dst.endswith("index.jsonl") and not fired:
+            fired["done"] = True
+            other.put(_rec("window_put"))
+            other.discard("r0")
+        return real_replace(src, dst, *a, **k)
+
+    monkeypatch.setattr(store_mod.os, "replace", inject)
+    s.compact()
+    monkeypatch.setattr(store_mod.os, "replace", real_replace)
+    assert fired, "compaction never replaced the index"
+
+    live = set(replay_index(d))
+    assert "window_put" in live, "concurrent put lost in compaction window"
+    assert "r0" not in live, "del tombstone lost: record resurrected"
+    fresh = MemoStore(d)
+    assert "window_put" in fresh and "r0" not in fresh
+    s.refresh()
+    assert "window_put" in s and "r0" not in s
+
+
+def test_refresh_sees_same_size_overwrite(tmp_path):
+    """The race harness surfaced this: refresh()'s idempotent-line skip
+    compared only nbytes, so a same-size overwrite by another process
+    kept the stale meta forever."""
+    d = str(tmp_path)
+    a, b = MemoStore(d), MemoStore(d)
+    a.put(_rec("fp", version=1))
+    b.refresh()
+    assert b.get("fp").meta["v"] == 1
+    a.put(_rec("fp", version=2))       # same nbytes, different meta
+    b.refresh()
+    assert b.get("fp").meta["v"] == 2, "stale meta survived refresh"
+
+
+def test_memo_ownership_race_threads_and_subprocess(tmp_path):
+    """>= 1000 interleaved put/discard/refresh/compact ops from 3 threads
+    + 1 subprocess; final index must be exact vs serial replay of each
+    owner's script (no lost puts, no lost tombstones, exact versions)."""
+    total = memo_race(str(tmp_path), threads=3, ops_per_owner=250,
+                      use_subprocess=True)
+    assert total >= 1000
+
+
+def test_eviction_lru_exact(tmp_path):
+    eviction_phase(str(tmp_path))
+
+
+def test_analysis_pool_concurrent_equals_serial():
+    assert analysis_race(threads=4, n_jobs=6) == 6

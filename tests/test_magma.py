@@ -43,6 +43,7 @@ def test_operators_produce_valid_genomes():
                lambda k: _crossover_rg(k, dad, mom),
                lambda k: _crossover_accel(k, dad, mom, 4),
                lambda k: _mutate(k, dad[0], dad[1], 0.3, 4)):
+        # lint: disable=L001(every operator deliberately gets the same fresh key — validity, not independence, is under test)
         accel, prio = fn(key)
         _valid(accel, prio, 4)
 
