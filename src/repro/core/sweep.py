@@ -207,7 +207,7 @@ def row_executable(strategy: SearchStrategy, generations: int,
             "per-row objective_code select is scalar-only")
     mesh = None if num_devices == 1 else _sweep_mesh(num_devices)
     target = (NamedSharding(mesh, PartitionSpec(SWEEP_AXIS))
-              if mesh is not None else jax.devices()[0])
+              if mesh is not None else jax.local_devices()[0])
     fn = _chunk_fn(mesh, strategy, generations, evolve_last, group_size,
                    use_kernel, objective, keep_population, warm)
     return fn, target
@@ -322,8 +322,8 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
     N = int(rows_keys.shape[0])
     G = int(rows_params.lat.shape[-2])
 
-    avail = len(jax.devices())
-    ndev = avail if sweep.max_devices is None else max(1, min(
+    avail = len(jax.local_devices())     # addressable, not global:
+    ndev = avail if sweep.max_devices is None else max(1, min(  # fleet-safe
         sweep.max_devices, avail))
     ndev = min(ndev, N)              # never more shards than real rows
 

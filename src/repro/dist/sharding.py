@@ -67,8 +67,12 @@ def flat_mesh(num_devices: Optional[int] = None, axis_name: str = "data",
     The data-parallel shape used for embarrassingly parallel work
     (``repro.core.sweep`` shards scenario grids over it); ``num_devices``
     is clamped to what the platform actually has, so callers can ask for
-    "all of them" (None) or a bound without counting devices first."""
-    devs = list(devices) if devices is not None else jax.devices()
+    "all of them" (None) or a bound without counting devices first.
+    Defaults to this process's ADDRESSABLE devices: under
+    ``jax.distributed`` (repro.fleet multi-controller mode) the global
+    ``jax.devices()`` includes other hosts' devices, which a
+    single-process shard_map cannot address — identical outside it."""
+    devs = list(devices) if devices is not None else jax.local_devices()
     n = len(devs) if num_devices is None else max(1, min(num_devices,
                                                          len(devs)))
     return make_mesh((n,), (axis_name,), devices=devs[:n])

@@ -1,0 +1,27 @@
+"""repro.fleet — a multi-host scheduling fleet over ``repro.stream``.
+
+One level up from the single-process service (MAGMA's many-jobs /
+many-cores contention, applied to many scheduler *hosts*): N workers,
+each running the unchanged :class:`~repro.stream.StreamingScheduler`
+over its local devices, fed by a front-door router that partitions the
+arrival trace by compatibility key and rebalances with work-stealing,
+all sharing one fingerprint-sharded memo store so every schedule is
+computed once fleet-wide.
+
+The contract that keeps the fleet reviewable: every schedule a fleet
+returns is bit-identical to the standalone single-host ``run_sweep``
+row for the same ``(scenario, seed)`` — regardless of worker count,
+steal history, or which worker served it (gated by tests/test_fleet.py
+and benchmarks/perf_fleet.py).
+"""
+from repro.fleet.shared_memo import NUM_SHARDS, ShardedMemoStore, shard_of
+from repro.fleet.launch import Fleet, FleetConfig, launch_fleet
+from repro.fleet.router import FleetRouter, WorkerQueue
+from repro.fleet.metrics import FleetMetrics, WorkerStats, compute_fleet_metrics
+
+__all__ = [
+    "NUM_SHARDS", "ShardedMemoStore", "shard_of",
+    "Fleet", "FleetConfig", "launch_fleet",
+    "FleetRouter", "WorkerQueue",
+    "FleetMetrics", "WorkerStats", "compute_fleet_metrics",
+]

@@ -1,0 +1,263 @@
+"""Fleet launcher — N scheduler workers as subprocesses (or one
+``jax.distributed`` multi-controller group).
+
+CPU-testable end to end: each worker subprocess gets
+``--xla_force_host_platform_device_count=<devices_per_worker>`` in its
+``XLA_FLAGS``, so a laptop CI job brings up a genuine 2-worker x
+4-device fleet.  On real multi-host accelerators the same launcher runs
+with ``devices_per_worker=None`` (each worker sees its host's devices)
+and ``distributed=True`` (one global JAX runtime via
+``jax.distributed.initialize``; scheduling stays process-local because
+the whole stack dispatches over ``jax.local_devices()``).
+
+    cfg = FleetConfig(num_workers=2, devices_per_worker=4, budget=300)
+    with launch_fleet(cfg) as fleet:
+        results = fleet.run(generate_trace(TraceConfig(...)))
+        print(fleet.last_metrics.summary())
+
+``launch_fleet`` blocks until every worker reports ready (compiled
+imports + device init), so ``run`` measures scheduling, not startup.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.fleet.worker import PREFIX
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet shape + the per-worker service knobs.
+
+    num_workers         scheduler processes
+    devices_per_worker  fake host-platform devices per worker (None:
+                        inherit the environment — real accelerators)
+    budget / strategy   the per-worker StreamingScheduler defaults
+    stream              StreamConfig field overrides for every worker
+                        (dict, e.g. {"batch_rows": 4})
+    memo_path           shared ShardedMemoStore directory (None: no memo)
+    memo_near           near-hit warm seeding from the shared store.
+                        OFF by default: a warm-seeded row searches from
+                        a transferred population and is bit-identical to
+                        the memoized warm search, NOT to the cold
+                        standalone row — the fleet's hard guarantee.
+                        Turn on when convergence matters more (records
+                        keep their warm_seeded provenance either way)
+    chunk_rows          max scenarios the router sends a worker per chunk
+    max_outstanding     chunks in flight per worker (2 = the pipe's
+                        double buffering: the next chunk rides the wire
+                        while the current one computes)
+    steal               work-stealing on (False: static partition only)
+    distributed         one global JAX runtime via jax.distributed
+                        (coordinator on localhost; workers barrier at
+                        init) instead of independent runtimes
+    ready_timeout_s     max wait for worker startup (imports + devices)
+    """
+    num_workers: int = 2
+    devices_per_worker: Optional[int] = None
+    budget: int = 2_000
+    strategy: Optional[str] = None
+    stream: Optional[Dict] = None
+    memo_path: Optional[str] = None
+    memo_near: bool = False
+    chunk_rows: int = 16
+    max_outstanding: int = 2
+    steal: bool = True
+    distributed: bool = False
+    ready_timeout_s: float = 120.0
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, got "
+                             f"{self.num_workers}")
+        if self.devices_per_worker is not None \
+                and self.devices_per_worker < 1:
+            raise ValueError("devices_per_worker must be >= 1 or None")
+        if self.chunk_rows < 1 or self.max_outstanding < 1:
+            raise ValueError("chunk_rows and max_outstanding must be >= 1")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+class WorkerHandle:
+    """One worker subprocess: stdin for commands, a reader thread
+    draining stdout protocol lines into the fleet's shared inbox."""
+
+    def __init__(self, worker_id: str, proc: subprocess.Popen,
+                 inbox: "queue.Queue[Tuple[str, Dict]]"):
+        self.worker_id = worker_id
+        self.proc = proc
+        self._inbox = inbox
+        self.outstanding = 0          # chunks sent, not yet done
+        self.stats: Dict = {}         # final worker-side rollup (on stop)
+        self.stats_snapshot: Optional[Dict] = None   # router delta base
+        self._reader = threading.Thread(target=self._drain, daemon=True)
+        self._reader.start()
+
+    def _drain(self) -> None:
+        for line in self.proc.stdout:
+            if line.startswith(PREFIX):
+                try:
+                    self._inbox.put((self.worker_id,
+                                     json.loads(line[len(PREFIX):])))
+                except json.JSONDecodeError:
+                    pass              # torn line at kill time
+        self._inbox.put((self.worker_id, {"ok": "eof"}))
+
+    def send(self, msg: Dict) -> None:
+        self.proc.stdin.write(json.dumps(msg) + "\n")
+        self.proc.stdin.flush()
+
+    def close(self, timeout: float = 10.0) -> None:
+        try:
+            if self.proc.poll() is None:
+                self.send({"cmd": "stop"})
+                self.proc.stdin.close()
+                self.proc.wait(timeout=timeout)
+        except (BrokenPipeError, OSError, subprocess.TimeoutExpired):
+            self.proc.kill()
+        finally:
+            if self.proc.poll() is None:
+                self.proc.kill()
+
+
+class Fleet:
+    """A running fleet: worker handles + the router front door.
+
+    ``run`` routes a trace through the fleet and returns
+    :class:`~repro.fleet.router.FleetResult`s ordered by uid;
+    ``last_metrics`` holds the run's
+    :class:`~repro.fleet.metrics.FleetMetrics`.
+    """
+
+    def __init__(self, cfg: FleetConfig):
+        self.cfg = cfg
+        self.inbox: "queue.Queue[Tuple[str, Dict]]" = queue.Queue()
+        self.workers: List[WorkerHandle] = []
+        self.last_metrics = None
+        coordinator = (f"127.0.0.1:{_free_port()}"
+                       if cfg.distributed else None)
+        for i in range(cfg.num_workers):
+            self.workers.append(self._spawn(i, coordinator))
+        # send every init BEFORE waiting: distributed workers barrier
+        # inside jax.distributed.initialize, so a send-then-wait loop
+        # would deadlock on the first worker
+        for i, w in enumerate(self.workers):
+            w.send(self._init_msg(i, coordinator))
+        self._await_ready()
+
+    # -- startup --------------------------------------------------------------
+    def _spawn(self, i: int, coordinator: Optional[str]) -> WorkerHandle:
+        env = dict(os.environ)
+        # the worker must import the SAME repro the parent runs,
+        # regardless of the parent's cwd-relative PYTHONPATH (repro is
+        # a namespace package: locate it via __path__, not __file__)
+        import repro
+        root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+        env["PYTHONPATH"] = (root + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else root)
+        if self.cfg.devices_per_worker is not None:
+            flags = env.get("XLA_FLAGS", "")
+            flags = " ".join(f for f in flags.split()
+                             if "host_platform_device_count" not in f)
+            env["XLA_FLAGS"] = (flags + " --xla_force_host_platform_"
+                                f"device_count={self.cfg.devices_per_worker}"
+                                ).strip()
+        proc = subprocess.Popen(
+            [sys.executable, "-u", "-m", "repro.fleet.worker"],
+            stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=subprocess.DEVNULL, env=env, text=True)
+        return WorkerHandle(f"w{i}", proc, self.inbox)
+
+    def _init_msg(self, i: int, coordinator: Optional[str]) -> Dict:
+        cfg = self.cfg
+        return {"cmd": "init", "worker_id": f"w{i}",
+                "budget": cfg.budget, "strategy": cfg.strategy,
+                "stream": cfg.stream or {}, "memo_path": cfg.memo_path,
+                "memo_near": cfg.memo_near,
+                "distributed": (None if coordinator is None else
+                                {"coordinator_address": coordinator,
+                                 "num_processes": cfg.num_workers,
+                                 "process_id": i})}
+
+    def _await_ready(self) -> None:
+        deadline = time.monotonic() + self.cfg.ready_timeout_s
+        pending = {w.worker_id for w in self.workers}
+        while pending:
+            try:
+                wid, msg = self.inbox.get(
+                    timeout=max(0.0, deadline - time.monotonic()))
+            except queue.Empty:
+                self.close()
+                raise TimeoutError(
+                    f"fleet startup: workers {sorted(pending)} not ready "
+                    f"within {self.cfg.ready_timeout_s:.0f}s")
+            if msg.get("ok") == "ready":
+                pending.discard(wid)
+            elif msg.get("ok") in ("error", "eof"):
+                self.close()
+                raise RuntimeError(f"worker {wid} failed at init: {msg}")
+
+    # -- serving --------------------------------------------------------------
+    def run(self, requests: Sequence = (), prepared: Sequence = (),
+            steal: Optional[bool] = None):
+        """Route one trace (and/or prepared scenarios) through the
+        fleet; results come back uid-ordered, metrics land in
+        ``last_metrics``.  ``steal`` overrides the config's
+        work-stealing flag for this run only."""
+        from repro.fleet.router import FleetRouter
+        router = FleetRouter(self.workers, self.inbox,
+                             chunk_rows=self.cfg.chunk_rows,
+                             max_outstanding=self.cfg.max_outstanding,
+                             steal=(self.cfg.steal if steal is None
+                                    else bool(steal)),
+                             default_budget=self.cfg.budget,
+                             stream=self.cfg.stream or {})
+        results = router.run(requests, prepared=prepared)
+        self.last_metrics = router.last_metrics
+        return results
+
+    def close(self) -> None:
+        for w in self.workers:
+            w.close()
+        # collect final worker rollups (already enqueued by stop replies)
+        while True:
+            try:
+                wid, msg = self.inbox.get_nowait()
+            except queue.Empty:
+                break
+            if msg.get("ok") == "stopped":
+                for w in self.workers:
+                    if w.worker_id == wid:
+                        w.stats = msg.get("stats", {})
+
+    def __enter__(self) -> "Fleet":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def launch_fleet(cfg: Optional[FleetConfig] = None, **overrides) -> Fleet:
+    """Bring up a fleet (blocking until every worker is ready).  Keyword
+    overrides patch ``cfg`` (or a default one): ``launch_fleet(
+    num_workers=4, devices_per_worker=2)``."""
+    if cfg is None:
+        cfg = FleetConfig(**overrides)
+    elif overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return Fleet(cfg)

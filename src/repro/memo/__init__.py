@@ -24,12 +24,13 @@ admission (exact hits bypass the dispatch queue), and ``M3E(memo=...)``
 from repro.memo.fingerprint import (family_key, feature_vector,
                                     scenario_digest, search_fingerprint,
                                     strategy_signature)
-from repro.memo.store import MemoRecord, MemoStore
+from repro.memo.store import (MemoLayoutError, MemoRecord, MemoStore,
+                              read_layout)
 from repro.memo.engine import MemoHit, MemoStats, ScheduleMemo
 
 __all__ = [
     "family_key", "feature_vector", "scenario_digest",
     "search_fingerprint", "strategy_signature",
-    "MemoRecord", "MemoStore",
+    "MemoLayoutError", "MemoRecord", "MemoStore", "read_layout",
     "MemoHit", "MemoStats", "ScheduleMemo",
 ]

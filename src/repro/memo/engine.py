@@ -91,6 +91,11 @@ class MemoStats:
     near_hits: int = 0
     misses: int = 0
     records: int = 0
+    # exact hits whose stored record was solved by a DIFFERENT origin
+    # (another fleet worker's ``ScheduleMemo(origin=...)``) — the
+    # cross-worker reuse the shared store exists for.  Always a subset
+    # of exact_hits; 0 when origins are unset.
+    foreign_hits: int = 0
 
     def summary(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -127,7 +132,8 @@ class ScheduleMemo:
 
     def __init__(self, store: Optional[MemoStore] = None,
                  jitter: float = 0.02, near: bool = True,
-                 max_donor_dist: Optional[float] = MAX_DONOR_DIST):
+                 max_donor_dist: Optional[float] = MAX_DONOR_DIST,
+                 origin: Optional[str] = None):
         # NOT `store or MemoStore()`: an empty MemoStore is len()==0 and
         # would be silently replaced by a fresh in-memory one
         self.store = store if store is not None else MemoStore()
@@ -135,6 +141,11 @@ class ScheduleMemo:
         self.near = bool(near)
         self.max_donor_dist = (None if max_donor_dist is None
                                else float(max_donor_dist))
+        # Provenance stamp for shared stores: records carry the origin
+        # that solved them, and an exact hit on a record some OTHER
+        # origin solved counts as a foreign hit (fleet workers pass
+        # their worker id — the cross-worker hit rate falls out).
+        self.origin = origin
         self.stats = MemoStats()
         self._lock = threading.Lock()
 
@@ -186,6 +197,9 @@ class ScheduleMemo:
                 self.stats.misses += 1
                 return None
             self.stats.exact_hits += 1
+            if rec.meta.get("origin") is not None \
+                    and rec.meta.get("origin") != self.origin:
+                self.stats.foreign_hits += 1
         return MemoHit(
             fingerprint=fp,
             best_fitness=float(
@@ -294,7 +308,8 @@ class ScheduleMemo:
                   "n_samples": generations * P,
                   "budget": int(budget),
                   "family": family,
-                  "warm_seeded": warm is not None}))
+                  "warm_seeded": warm is not None,
+                  "origin": self.origin}))
         with self._lock:
             self.stats.records += 1
         return fp

@@ -61,6 +61,26 @@ except ImportError:          # non-POSIX: appends fall back to the
 
 _COMPACT_SLACK = 4          # compact when events > live records * this
 
+#: On-disk layout marker (``<path>/memo_layout.json``).  Absent = the v1
+#: single-file layout this module owns; ``{"version": 2, ...}`` = the
+#: fingerprint-prefix-sharded layout ``repro.fleet.shared_memo`` owns.
+LAYOUT_MARKER = "memo_layout.json"
+
+
+class MemoLayoutError(RuntimeError):
+    """The store directory uses a different on-disk layout version than
+    the opener understands (e.g. a v1 ``MemoStore`` opening a directory
+    the sharded v2 store migrated)."""
+
+
+def read_layout(path: str) -> Optional[Dict]:
+    """The directory's layout marker, or None (v1 / fresh directory)."""
+    try:
+        with open(os.path.join(path, LAYOUT_MARKER)) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
 
 @dataclasses.dataclass
 class MemoRecord:
@@ -102,9 +122,23 @@ class MemoStore:
     """
 
     def __init__(self, path: Optional[str] = None,
-                 byte_budget: Optional[int] = None):
+                 byte_budget: Optional[int] = None,
+                 index_name: str = "index.jsonl"):
         self.path = os.path.abspath(path) if path else None
         self.byte_budget = byte_budget
+        # which JSONL file this store replays.  The default is the v1
+        # single-file layout; the sharded v2 store opens one MemoStore
+        # per "index-<h>.jsonl" shard (all sharing the payload dir).
+        self.index_name = index_name
+        if self.path and index_name == "index.jsonl":
+            layout = read_layout(self.path)
+            if layout is not None and layout.get("version", 1) != 1:
+                raise MemoLayoutError(
+                    f"{self.path} uses memo layout v{layout.get('version')}"
+                    f" ({layout.get('shards', '?')}-way sharded index); a "
+                    "plain MemoStore only reads the v1 single-file layout "
+                    "— open it with repro.fleet.shared_memo."
+                    "ShardedMemoStore instead")
         self._lock = threading.RLock()
         # fingerprint -> MemoRecord, LRU order (last = most recent)
         self._records: "OrderedDict[str, MemoRecord]" = OrderedDict()  # @locked:_lock
@@ -120,7 +154,7 @@ class MemoStore:
 
     # -- paths ----------------------------------------------------------------
     def _index_path(self) -> str:
-        return os.path.join(self.path, "index.jsonl")
+        return os.path.join(self.path, self.index_name)
 
     def _payload_path(self, fp: str) -> str:
         return os.path.join(self.path, "payload", f"{fp}.npz")
@@ -293,10 +327,31 @@ class MemoStore:
 
     def refresh(self) -> int:
         """Replay index lines appended since the last load (other
-        processes' inserts/evictions).  Returns events consumed."""
+        processes' inserts/evictions).  Returns events consumed.
+
+        Tail-only by construction: the byte cursor (``_index_pos``) marks
+        how far this store has consumed its index file, so a refresh
+        parses only the appended tail — never the whole file — and an
+        inode change (another process compacted) falls back to a full
+        rescan of the replacement index.  The no-change probe below makes
+        the idle case one ``stat`` with no ``open`` at all, which is what
+        keeps consult-before-every-lookup cheap on a large shared store
+        (the fleet's shard stores refresh on every chunk)."""
         if not self.path:
             return 0
         with self._lock:
+            try:
+                st0 = os.stat(self._index_path())
+            except FileNotFoundError:
+                return 0
+            if (self._index_ino is not None
+                    and st0.st_ino == self._index_ino
+                    and st0.st_size == self._index_pos):
+                # unchanged: same inode, not a byte past our cursor.  A
+                # line landing between this stat and return is caught by
+                # the next refresh — append-only writes can only grow
+                # the file, never mutate consumed bytes.
+                return 0
             try:
                 f = open(self._index_path(), "rb")
             except FileNotFoundError:
@@ -382,7 +437,11 @@ class MemoStore:
 
     def _compact_locked(self) -> None:
         """@holds:_lock (cross-process exclusion via the lock file)"""
-        lockfile = os.path.join(self.path, "compact.lock")
+        # shard stores compact independently: one lock per index file
+        # (the legacy name is kept for the v1 single-file layout)
+        lockfile = os.path.join(
+            self.path, "compact.lock" if self.index_name == "index.jsonl"
+            else f"{self.index_name}.compact.lock")
         try:
             fd = os.open(lockfile, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
         except FileExistsError:

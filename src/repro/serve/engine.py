@@ -147,7 +147,7 @@ class MultiTenantEngine:
                  system_bw: float = 64e9, group_size: int = 64,
                  decode_window: int = 32, budget: int = 2_000,
                  method: str = "magma", seed: int = 0,
-                 stream=None, memo=None):
+                 stream=None, memo=None, fleet=None):
         self.tenants = {t.name: t for t in tenants}
         self.submeshes = list(submeshes or default_submeshes())
         self.system_bw = float(system_bw)
@@ -168,6 +168,12 @@ class MultiTenantEngine:
         # applies to the service this engine creates — an injected
         # ``stream`` keeps whatever memo it was built with.
         self.memo = memo
+        # fleet-backed option: an injected ``repro.fleet.Fleet`` serves
+        # device-resident methods instead of an in-process stream — the
+        # prepared tables cross to a worker bit-exactly and the returned
+        # schedule is bit-identical to the in-process path (the fleet
+        # contract).  The fleet is the injector's to launch and close.
+        self.fleet = fleet
 
     def stream_service(self):
         """The ``repro.stream.StreamingScheduler`` this engine is a client
@@ -281,9 +287,17 @@ class MultiTenantEngine:
         stream_res = None
         if strategy.device_resident:
             slo = self.slo_for(jobs)
-            stream_res = self.stream_service().schedule_prepared(
-                fit, seed=self.seed, budget=self.budget, strategy=strategy,
-                priority=slo.priority, deadline_s=slo.deadline_s)
+            if self.fleet is not None:
+                from repro.stream.service import PreparedScenario
+                stream_res = self.fleet.run(prepared=[PreparedScenario(
+                    fit=fit, seed=self.seed, budget=self.budget,
+                    strategy=strategy, priority=slo.priority,
+                    deadline_s=slo.deadline_s)])[0]
+            else:
+                stream_res = self.stream_service().schedule_prepared(
+                    fit, seed=self.seed, budget=self.budget,
+                    strategy=strategy,
+                    priority=slo.priority, deadline_s=slo.deadline_s)
             res = stream_res.to_search_result()
         else:
             res: SearchResult = run_strategy(strategy, fit,

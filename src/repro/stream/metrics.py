@@ -82,13 +82,22 @@ class StreamMetrics:
     # refinements recorded to the memo (never routed)
     anytime_interims: int = 0
     anytime_refinements: int = 0
+    # admission accounting (from the run's AdmissionQueues; zeros when
+    # unavailable).  A member counts in exactly one of dispatched /
+    # stolen — a held partial flushed early or stolen by the fleet
+    # router is never double-counted (``early_flushes`` tags reasons,
+    # it is not a second member count)
+    queue_peak_depth: int = 0       # max members held at once
+    early_flushes: int = 0          # partials preempted out of hold
+    stolen_members: int = 0         # members taken by a fleet router
 
     def summary(self) -> Dict[str, float]:
         return dataclasses.asdict(self)
 
 
 def compute_metrics(results, batches, wall_s: float,
-                    refinements: int = 0) -> StreamMetrics:
+                    refinements: int = 0,
+                    admission=None) -> StreamMetrics:
     """Aggregate routed :class:`~repro.stream.service.StreamResult`s and
     per-batch dispatch records into service metrics.  ``refinements``
     counts the anytime background rows that were recorded but (by
@@ -142,4 +151,11 @@ def compute_metrics(results, batches, wall_s: float,
         anytime_interims=sum(bool(getattr(r, "anytime_interim", False))
                              for r in results),
         anytime_refinements=int(refinements),
+        # `is not None`, NOT truthiness: a drained AdmissionQueues is
+        # falsy (empty) but its counters are exactly what we want
+        queue_peak_depth=(admission.peak_depth
+                          if admission is not None else 0),
+        early_flushes=(admission.early_flushes
+                       if admission is not None else 0),
+        stolen_members=(admission.stolen if admission is not None else 0),
     )

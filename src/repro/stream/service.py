@@ -57,6 +57,7 @@ from repro.core.pareto import ParetoFront, pareto_front
 from repro.core.strategies import SearchStrategy, WarmStart, plan_generations
 from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
 from repro.lint.runtime import transfer_sanitizer
+from repro.stream.admission import AdmissionQueues
 from repro.stream.analysis import AnalysisPool, ReadyScenario
 from repro.stream.metrics import StreamMetrics, compute_metrics
 from repro.stream.workloads import ScenarioRequest, TraceConfig, generate_trace
@@ -312,6 +313,9 @@ class StreamingScheduler:
         self.last_metrics: Optional[StreamMetrics] = None
         self.last_batches: List[_BatchRecord] = []   # @locked:_run_lock
         self._refined = 0            # @locked:_run_lock  silent refinements
+        # the last run's AdmissionQueues (counters: enqueued/dispatched/
+        # stolen/depth/peak/early_flushes)  @locked:_run_lock
+        self.last_admission: Optional[AdmissionQueues] = None
 
         # one run at a time: the clock zero, batch records, and metrics
         # are per-run state, so concurrent clients (several engines
@@ -352,62 +356,16 @@ class StreamingScheduler:
         return min(b, self.stream.batch_rows)
 
     # -- SLO ordering ---------------------------------------------------------
-    # class rank: urgent < normal < batch < silent refinement (anytime
-    # background rows soak only device slack)
-    _PRIO_RANK = {"urgent": 0, "normal": 1, "batch": 2}
-    _SILENT_RANK = 3
-
-    def _rank(self, m: ReadyScenario) -> int:
-        if m.silent:
-            return self._SILENT_RANK
-        return self._PRIO_RANK.get(
-            getattr(m.request, "priority", "normal"), 1)
-
-    def _slack(self, m: ReadyScenario, now: float) -> float:
-        """Seconds until the member's SLO deadline (inf without one)."""
-        deadline = getattr(m.request, "deadline_s", None)
-        if deadline is None or m.silent:
-            return np.inf
-        return m.request.arrival_s + deadline - now
-
-    def _queue_score(self, q, now: float) -> Tuple[int, float, int]:
-        """Admission order among non-empty queues: most urgent class
-        first, then least slack, then deepest (numbers only — compat
-        keys themselves don't order)."""
-        return (min(self._rank(m) for m in q),
-                min(self._slack(m, now) for m in q),
-                -len(q))
-
-    def _must_flush(self, q, now: float) -> bool:
-        """Whether a held partial goes out NOW: its oldest member has
-        waited past max_hold_s (liveness, pre-SLO behavior), or an
-        urgent member's slack is down to the margin — the hold is
-        preempted (in-flight device work never is)."""
-        if now - min(m.ready_s for m in q) > self.stream.max_hold_s:
-            return True
-        return any(self._rank(m) == 0
-                   and self._slack(m, now) <= self.stream.slo_margin_s
-                   for m in q)
-
-    def _take_members(self, q) -> List[ReadyScenario]:
-        """Pull up to batch_rows members.  SLO-aware: the most urgent
-        (class rank, absolute deadline, uid) members first; blind: FIFO."""
-        k = min(len(q), self.stream.batch_rows)
-        if not self.stream.slo_aware:
-            return [q.popleft() for _ in range(k)]
-
-        def member_key(m: ReadyScenario):
-            deadline = getattr(m.request, "deadline_s", None)
-            absolute = (np.inf if deadline is None or m.silent
-                        else m.request.arrival_s + deadline)
-            return (self._rank(m), absolute, m.request.uid)
-
-        take = sorted(q, key=member_key)[:k]
-        taken = {id(m) for m in take}
-        rest = [m for m in q if id(m) not in taken]
-        q.clear()
-        q.extend(rest)
-        return take
+    # the ordering policy (class rank / slack / early flush / member
+    # take-order) lives in repro.stream.admission.AdmissionQueues now —
+    # extracted so the fleet router can own queues with the same
+    # semantics and steal held partials between workers
+    def _admission(self) -> AdmissionQueues:
+        s = self.stream
+        return AdmissionQueues(batch_rows=s.batch_rows,
+                               slo_aware=s.slo_aware,
+                               max_hold_s=s.max_hold_s,
+                               slo_margin_s=s.slo_margin_s)
 
     def _keep_population(self, strategy: SearchStrategy) -> bool:
         """Whether dispatches emit converged populations: memo attached
@@ -425,7 +383,10 @@ class StreamingScheduler:
                                                     strategy.ask_size)
         n = len(members)
         bucket = self._bucket(n)
-        avail = len(jax.devices())
+        # local_devices, not devices: under jax.distributed (the fleet's
+        # multi-controller mode) jax.devices() is GLOBAL and a worker
+        # may only address its own — identical single-controller
+        avail = len(jax.local_devices())
         ndev = avail if self.stream.max_devices is None else max(1, min(
             self.stream.max_devices, avail))
         ndev = min(ndev, bucket)
@@ -545,7 +506,8 @@ class StreamingScheduler:
         realtime = self.stream.realtime
 
         to_submit = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
-        queues: Dict[Tuple, deque] = {}
+        queues = self._admission()
+        self.last_admission = queues      # counters readable post-run
         inflight: deque = deque()
         futs = set()
         results: List[StreamResult] = []
@@ -601,15 +563,14 @@ class StreamingScheduler:
                     request=dataclasses.replace(ready.request,
                                                 budget=anytime),
                     anytime=True)
-                queues.setdefault(self._compat_key(interim),
-                                  deque()).append(interim)
+                queues.push(self._compat_key(interim), interim)
                 ready.silent = True
-            queues.setdefault(self._compat_key(ready), deque()).append(ready)
+            queues.push(self._compat_key(ready), ready)
 
         for p in prepared:
             admit(self._prepared_ready(p))
 
-        while to_submit or futs or any(queues.values()) or inflight:
+        while to_submit or futs or queues or inflight:
             progressed = False
 
             # 1. feed due arrivals into the analysis pool
@@ -644,40 +605,12 @@ class StreamingScheduler:
             # SLO-aware: queues go out in (class rank, slack, -depth)
             # order — batch work never delays an urgent schedule; blind
             # (slo_aware=False): deepest queue first so batches fill out.
+            # (Policy + accounting live in AdmissionQueues.)
             while len(inflight) < self.stream.max_inflight:
-                ready_qs = [(len(q), k) for k, q in queues.items() if q]
-                if not ready_qs:
-                    break
-                now = self._clock()
-                key = None
-                if self.stream.slo_aware:
-                    # indices sorted on scores so ties never compare the
-                    # compat keys (strategies/None don't order)
-                    order = sorted(
-                        range(len(ready_qs)),
-                        key=lambda i: self._queue_score(
-                            queues[ready_qs[i][1]], now))
-                    for i in order:
-                        depth, k = ready_qs[i]
-                        if depth >= self.stream.batch_rows or not futs \
-                                or self._must_flush(queues[k], now):
-                            key = k
-                            break
-                else:
-                    depth, k = max(ready_qs, key=lambda x: x[0])
-                    if depth >= self.stream.batch_rows or not futs:
-                        key = k
-                    else:
-                        stale = [kk for _, kk in ready_qs
-                                 if now - min(m.ready_s
-                                              for m in queues[kk])
-                                 > self.stream.max_hold_s]
-                        if stale:
-                            key = stale[0]
+                key = queues.select(self._clock(), bool(futs))
                 if key is None:
                     break          # hold the partials: more is coming
-                inflight.append(
-                    self._dispatch(key, self._take_members(queues[key])))
+                inflight.append(self._dispatch(key, queues.take(key)))
                 progressed = True
 
             # 4. route: block on the head batch when the pipeline is full
@@ -698,8 +631,10 @@ class StreamingScheduler:
 
         wall = self._clock()
         results.sort(key=lambda r: r.request.uid)
+        queues.check()               # enqueued == dispatched+stolen+depth
         self.last_metrics = compute_metrics(results, self.last_batches, wall,
-                                            refinements=self._refined)
+                                            refinements=self._refined,
+                                            admission=queues)
         return results
 
     def run_trace(self, trace: TraceConfig) -> List[StreamResult]:

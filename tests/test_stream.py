@@ -188,6 +188,25 @@ def test_stream_metrics_sane(streamed):
     assert s["scenarios_per_sec"] > 0
 
 
+def test_admission_accounting_not_double_counted(streamed):
+    """The extracted admission queues (repro.stream.admission) keep the
+    quadruple ``enqueued == dispatched + stolen + depth``; in-process
+    runs never steal, every member dispatches exactly once (an early
+    flush is a reason tag on one dispatch, not a second count), and the
+    metrics mirror the queue counters."""
+    _, svc, results = streamed
+    aq = svc.last_admission
+    assert aq is not None
+    aq.check()
+    assert aq.enqueued == aq.dispatched == len(results)
+    assert aq.stolen == 0 and aq.depth == 0
+    assert aq.early_flushes <= aq.enqueued
+    m = svc.last_metrics
+    assert m.queue_peak_depth == aq.peak_depth > 0
+    assert m.early_flushes == aq.early_flushes
+    assert m.stolen_members == 0
+
+
 def test_interval_union():
     assert interval_union_s([(0, 1), (0.5, 2), (3, 4)]) == pytest.approx(3.0)
     assert interval_union_s([]) == 0.0
