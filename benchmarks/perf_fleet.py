@@ -102,18 +102,23 @@ def run(num_scenarios: int, group_size: int, budget: int,
     sides = {}
     rerun_m = None
     results2 = rerun = None
+    post_warmup_compiles = 0
     for workers in (1, 2):
         with tempfile.TemporaryDirectory() as memo:
             cfg = FleetConfig(num_workers=workers,
                               devices_per_worker=devices_per_worker,
                               budget=budget, memo_path=memo,
                               stream={"batch_rows": batch_rows},
-                              chunk_rows=chunk_rows)
+                              chunk_rows=chunk_rows,
+                              recompile_guard=True)
             t0 = time.perf_counter()
             with launch_fleet(cfg) as fleet:
                 print(f"{workers}-worker fleet up in "
                       f"{time.perf_counter() - t0:.1f} s")
-                fleet.run(warm)          # compiles live here, not below
+                fleet.warmup(warm)       # compiles live here, not below:
+                fleet.mark_warm()        # every bucket precompiled, any
+                                         # later worker compile is a
+                                         # violation worker_stats() shows
                 res = fleet.run(trace)
                 sides[workers] = _fleet_side(
                     f"{workers}-worker", fleet.last_metrics.summary())
@@ -124,6 +129,9 @@ def run(num_scenarios: int, group_size: int, budget: int,
                     # other side of the fleet
                     rerun = fleet.run(trace, steal=False)
                     rerun_m = fleet.last_metrics.summary()
+                post_warmup_compiles += sum(
+                    d.get("recompiles_post_warmup", 0)
+                    for d in fleet.worker_stats().values())
 
     cpus = os.cpu_count() or 1
     scaling = (sides[2]["scenarios_per_sec"]
@@ -131,6 +139,12 @@ def run(num_scenarios: int, group_size: int, budget: int,
     print(f"scaling 1 -> 2 workers: {scaling:.2f}x aggregate "
           f"scenarios/sec ({cpus} host core(s); two workers timeshare "
           f"a single core, so > 1x needs cores >= workers)")
+
+    assert post_warmup_compiles == 0, \
+        (f"{post_warmup_compiles} worker jit compile(s) after the warm "
+         f"boundary — a bucket the warm trace missed polluted the "
+         f"measured runs")
+    print("recompiles after warm boundary: 0 across all workers (guarded)")
 
     _check_bit_identical(results2, budget)
     print(f"all {len(results2)} fleet schedules bit-identical to "
@@ -166,6 +180,7 @@ def run(num_scenarios: int, group_size: int, budget: int,
         "scaling_2w_over_1w": scaling,
         "rerun_steal_free": rerun_m,
         "cross_worker_hits": rerun_m["memo_foreign_hits"],
+        "recompiles_post_warmup": post_warmup_compiles,
         "bit_identical": True,
         "unix_time": time.time(),
     }

@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import M3E, MagmaConfig
 from repro.core.strategies import MagmaStrategy, run_strategy
 from repro.costmodel import get_setting
+from repro.lint.runtime import RecompileGuard
 from repro.memo import ScheduleMemo
 from repro.stream import (StreamConfig, StreamingScheduler, TraceConfig,
                           generate_trace)
@@ -79,9 +80,14 @@ def run_hit_sweep(num_requests, pool_size, group_size, budget, batch_rows,
                              memo=ScheduleMemo())
     plain = StreamingScheduler(budget=budget, stream=stream_cfg)
     # compile every bucket (memo-on also compiles the keep-population and
-    # warm-seeded executables) so the sweep measures the service
+    # warm-seeded executables) so the sweep measures the service; the
+    # guard holds the measured loops to zero compiles — a bucket the
+    # warmup missed would otherwise fold a multi-second XLA stall into
+    # one hit-rate point and skew the whole ramp
+    guard = RecompileGuard(label="perf_memo").__enter__()
     svc.warmup(pool + fresh_all[:1])
     plain.warmup(pool + fresh_all[:1])
+    guard.warmup()
 
     out = []
     fresh_at = 0
@@ -115,6 +121,8 @@ def run_hit_sweep(num_requests, pool_size, group_size, budget, batch_rows,
               f"-> {row['speedup_vs_no_memo']:5.2f}x, "
               f"{row['exact_hits']} exact hits, "
               f"{row['num_batches']} device batches")
+    guard.__exit__(None, None, None)     # detach + raise on violations
+    print(f"recompiles after warmup: {len(guard.post_warmup)} (guarded)")
     return out
 
 

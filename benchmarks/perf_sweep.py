@@ -31,6 +31,7 @@ from benchmarks.common import GB
 from repro.core import M3E, MagmaConfig
 from repro.core.sweep import SweepConfig, run_sweep
 from repro.costmodel import get_setting
+from repro.lint.runtime import RecompileGuard
 from repro.workloads import build_task_groups
 
 BW_LADDER = (0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 64.0, 256.0)
@@ -51,11 +52,25 @@ def run(budget: int, group_size: int, num_scenarios: int, seeds: int,
     seed_list = list(range(seeds))
 
     sweep_cfg = SweepConfig(chunk_rows=chunk_rows)
-    # warm-up compiles; the measured run below reuses the cached
-    # executables, matching the fleet workflow (compile once, sweep often)
-    run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list, sweep=sweep_cfg)
-    res = run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
-                    sweep=sweep_cfg)
+    single_cfg = SweepConfig(max_devices=1)
+    # warm-up compiles (sharded AND, with --compare, the single-device
+    # variant); the measured runs below reuse the cached executables,
+    # matching the fleet workflow (compile once, sweep often).  The
+    # guard holds them to it: any compile after guard.warmup() aborts
+    # the benchmark naming the executable instead of silently folding a
+    # multi-second XLA stall into the timings
+    guard = RecompileGuard(label="perf_sweep")
+    with guard:
+        run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
+                  sweep=sweep_cfg)
+        if compare:
+            run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
+                      sweep=single_cfg)
+        guard.warmup()
+        res = run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
+                        sweep=sweep_cfg)
+        single = (run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
+                            sweep=single_cfg) if compare else None)
 
     print(f"== perf: sharded scenario sweep (S2/Mix, G={group_size}, "
           f"P={population}, {res.generations} generations) ==")
@@ -87,15 +102,12 @@ def run(budget: int, group_size: int, num_scenarios: int, seeds: int,
         "best_objective_per_scenario": {
             f"bw{bw:g}GB": float(res.best_fitness[i].mean())
             for i, bw in enumerate(bws)},
+        "recompiles_post_warmup": len(guard.post_warmup),
         "unix_time": time.time(),
     }
+    print(f"recompiles after warmup: {len(guard.post_warmup)} (guarded)")
 
     if compare:
-        single = run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
-                           sweep=SweepConfig(max_devices=1))
-        # second call: warm timing, first paid the compile
-        single = run_sweep(fits, budget=budget, cfg=cfg, seeds=seed_list,
-                           sweep=SweepConfig(max_devices=1))
         np.testing.assert_array_equal(res.best_fitness, single.best_fitness)
         np.testing.assert_array_equal(res.history_best, single.history_best)
         print(f"single-device vmapped path: {single.wall_time_s:.3f} s "

@@ -15,16 +15,29 @@ priority classes with per-class deadlines) through an anytime-mode
 service: urgent deadline-carrying misses get an immediate short-budget
 interim schedule while the full-budget refinement lands in the memo for
 the next arrival.
+
+Pass ``--trace-out trace.json`` to run the first service with the obs
+layer on and drop a Chrome trace of every scenario's lifecycle spans —
+open it at https://ui.perfetto.dev (schedules stay bit-identical; the
+standalone re-check below still passes).
 """
+import argparse
+
 import numpy as np
 
 from repro.core.magma import magma_search
 from repro.memo import ScheduleMemo
+from repro.obs import format_summary, read_trace, summarize
 from repro.stream import (StreamConfig, StreamingScheduler, TraceConfig,
                           analyze_serial, generate_trace)
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="enable tracing and write a Perfetto-loadable "
+                         "Chrome trace of the first service run here")
+    args = ap.parse_args(argv)
     trace_cfg = TraceConfig(
         num_scenarios=12, arrival="bursty", rate_hz=4.0, burst_size=3.0,
         mixes=("Heavy", "Light", "HeavyLight"), settings=("S2",),
@@ -39,9 +52,10 @@ def main():
               f"batch x{r.batch_scale}")
     print("  ...")
 
+    obs = {"enabled": True} if args.trace_out else None
     svc = StreamingScheduler(
         budget=1_000,
-        stream=StreamConfig(batch_rows=4, analysis_workers=2))
+        stream=StreamConfig(batch_rows=4, analysis_workers=2, obs=obs))
     print("\nwarming executables (a long-lived service does this once)...")
     svc.warmup(trace)
 
@@ -69,6 +83,13 @@ def main():
     np.testing.assert_array_equal(check.best_accel, ref.best_accel)
     print(f"\nuid={check.request.uid} re-run standalone: bit-identical "
           f"(best={ref.best_fitness:.3e})")
+
+    if args.trace_out:
+        svc.export_trace(args.trace_out)
+        spans = read_trace(args.trace_out)
+        print(f"\nwrote {args.trace_out} ({len(spans)} spans — open at "
+              f"https://ui.perfetto.dev)")
+        print(format_summary(summarize(spans)))
 
     # --- SLO-aware admission + anytime schedules -----------------------
     slo_cfg = TraceConfig(

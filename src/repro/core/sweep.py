@@ -80,10 +80,17 @@ class SweepConfig:
                    ``device_get``, so any implicit host<->device copy
                    sneaking onto the hot path raises instead of silently
                    syncing.  Off by default (sanitizer, not behavior).
+    obs            observability (``repro.obs.ObsConfig``, a dict of its
+                   fields, or None = disabled): the chunk loop emits one
+                   ``sweep.chunk`` span per compiled call into the
+                   process-wide tracer (``repro.obs.get_tracer()``).
+                   Host-side stamps only — never inside the compiled
+                   call, so rows stay bit-identical.
     """
     chunk_rows: Optional[int] = None
     max_devices: Optional[int] = None
     transfer_guard: bool = False
+    obs: object = None
 
 
 @dataclasses.dataclass
@@ -346,6 +353,9 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
                                target))
 
     from repro.lint.runtime import transfer_sanitizer
+    from repro.obs import NULL_TRACER, as_obs_config, get_tracer
+    tracer = (get_tracer() if as_obs_config(sweep.obs).enabled
+              else NULL_TRACER)
 
     t0 = time.perf_counter()
     outs, walls = [], []
@@ -357,8 +367,10 @@ def run_rows(rows_params: FitnessParams, rows_keys, *,
             # copy overlaps it
             nxt = put_chunk(i + 1) if i + 1 < n_chunks else None
             tc = time.perf_counter()
-            out = fn(*buf)
-            jax.block_until_ready(out)
+            with tracer.span("sweep.chunk", chunk=i, rows=chunk_rows,
+                             devices=ndev):
+                out = fn(*buf)
+                jax.block_until_ready(out)
             walls.append(time.perf_counter() - tc)
             # results go to host immediately (explicit device_get — the
             # loop runs transfer-guard clean): keeping them on device

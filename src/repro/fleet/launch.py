@@ -61,6 +61,15 @@ class FleetConfig:
                         (coordinator on localhost; workers barrier at
                         init) instead of independent runtimes
     ready_timeout_s     max wait for worker startup (imports + devices)
+    obs                 repro.obs.ObsConfig (or field dict) shipped to
+                        every worker's StreamingScheduler AND used by
+                        the router itself (None: observability off).
+                        Workers default ``worker`` to their id and keep
+                        the span ring across chunks
+    recompile_guard     arm a process-lifetime RecompileGuard in every
+                        worker; ``mark_warm()`` sets the boundary and
+                        ``worker_stats()`` reports
+                        compiles / recompiles_post_warmup
     """
     num_workers: int = 2
     devices_per_worker: Optional[int] = None
@@ -74,6 +83,8 @@ class FleetConfig:
     steal: bool = True
     distributed: bool = False
     ready_timeout_s: float = 120.0
+    obs: Optional[Dict] = None
+    recompile_guard: bool = False
 
     def __post_init__(self):
         if self.num_workers < 1:
@@ -84,6 +95,8 @@ class FleetConfig:
             raise ValueError("devices_per_worker must be >= 1 or None")
         if self.chunk_rows < 1 or self.max_outstanding < 1:
             raise ValueError("chunk_rows and max_outstanding must be >= 1")
+        from repro.obs import as_obs_config
+        as_obs_config(self.obs)       # validate shape/values early
 
 
 def _free_port() -> int:
@@ -184,10 +197,15 @@ class Fleet:
 
     def _init_msg(self, i: int, coordinator: Optional[str]) -> Dict:
         cfg = self.cfg
+        obs = None
+        if cfg.obs is not None:
+            from repro.obs import as_obs_config
+            obs = dataclasses.asdict(as_obs_config(cfg.obs))
         return {"cmd": "init", "worker_id": f"w{i}",
                 "budget": cfg.budget, "strategy": cfg.strategy,
                 "stream": cfg.stream or {}, "memo_path": cfg.memo_path,
-                "memo_near": cfg.memo_near,
+                "memo_near": cfg.memo_near, "obs": obs,
+                "recompile_guard": cfg.recompile_guard,
                 "distributed": (None if coordinator is None else
                                 {"coordinator_address": coordinator,
                                  "num_processes": cfg.num_workers,
@@ -225,10 +243,63 @@ class Fleet:
                              steal=(self.cfg.steal if steal is None
                                     else bool(steal)),
                              default_budget=self.cfg.budget,
-                             stream=self.cfg.stream or {})
+                             stream=self.cfg.stream or {},
+                             obs=self.cfg.obs)
         results = router.run(requests, prepared=prepared)
         self.last_metrics = router.last_metrics
         return results
+
+    def warmup(self, requests: Sequence) -> None:
+        """Precompile every worker over a trace: each worker runs its
+        service's exhaustive ``warmup`` (all admission bucket sizes), so
+        a following ``mark_warm()`` boundary is airtight — no bucket is
+        left for the measured runs to compile."""
+        from repro.fleet.worker import encode_request
+        for w in self.workers:
+            w.send({"cmd": "warmup",
+                    "requests": [encode_request(r) for r in requests]})
+        pending = {w.worker_id for w in self.workers}
+        deadline = time.monotonic() + self.cfg.ready_timeout_s
+        while pending:
+            wid, msg = self.inbox.get(
+                timeout=max(0.0, deadline - time.monotonic()))
+            if msg.get("ok") == "warmed":
+                pending.discard(wid)
+            elif msg.get("ok") in ("error", "eof"):
+                raise RuntimeError(f"worker {wid} failed: {msg}")
+
+    def mark_warm(self) -> None:
+        """Tell every worker its RecompileGuard warmup is over: compiles
+        so far were deliberate precompilation, any later one shows up in
+        ``worker_stats()`` as ``recompiles_post_warmup``.  No-op for
+        workers launched without ``recompile_guard``."""
+        for w in self.workers:
+            w.send({"cmd": "warm_boundary"})
+        pending = {w.worker_id for w in self.workers}
+        while pending:
+            wid, msg = self.inbox.get(timeout=60.0)
+            if msg.get("ok") == "warm":
+                pending.discard(wid)
+            elif msg.get("ok") in ("error", "eof"):
+                raise RuntimeError(f"worker {wid} failed: {msg}")
+
+    def worker_stats(self) -> Dict[str, Dict]:
+        """Raw lifetime worker rollups (a 'stats' round trip to every
+        worker; unlike the router's per-run deltas these are the
+        process-lifetime counters, including ``compiles`` /
+        ``recompiles_post_warmup`` when the guard is armed)."""
+        for w in self.workers:
+            w.send({"cmd": "stats"})
+        stats: Dict[str, Dict] = {}
+        pending = {w.worker_id for w in self.workers}
+        while pending:
+            wid, msg = self.inbox.get(timeout=60.0)
+            if msg.get("ok") == "stats":
+                stats[wid] = msg.get("stats", {})
+                pending.discard(wid)
+            elif msg.get("ok") in ("error", "eof"):
+                raise RuntimeError(f"worker {wid} failed: {msg}")
+        return stats
 
     def close(self) -> None:
         for w in self.workers:

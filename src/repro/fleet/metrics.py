@@ -15,7 +15,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.stream.metrics import p99_s
+from repro.obs.registry import get_registry
+from repro.obs.stats import p99_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,7 +104,7 @@ def compute_fleet_metrics(results, worker_stats: Dict[str, Dict],
             misses += not met
     exact = sum(s.memo_exact_hits for s in stats)
     foreign = sum(s.memo_foreign_hits for s in stats)
-    return FleetMetrics(
+    m = FleetMetrics(
         num_workers=len(stats),
         num_scenarios=len(results),
         wall_s=wall_s,
@@ -125,3 +126,26 @@ def compute_fleet_metrics(results, worker_stats: Dict[str, Dict],
         deadline_misses=int(misses),
         num_with_deadline=int(with_deadline),
     )
+    _publish(m, stats)
+    return m
+
+
+def _publish(m: FleetMetrics, stats: List[WorkerStats]) -> None:
+    """Additive obs-registry rollup (counters accumulate across runs,
+    gauges hold the latest run); the returned dataclass is unchanged."""
+    reg = get_registry()
+    routed = reg.counter("repro_fleet_scenarios_total",
+                         "Scenarios routed, by worker")
+    for s in stats:
+        routed.inc(s.scenarios, worker=s.worker_id)
+    reg.counter("repro_fleet_steals_total",
+                "Work-stealing events across the fleet").inc(m.steals)
+    reg.counter("repro_fleet_memo_foreign_hits_total",
+                "Exact memo hits recorded by a different worker").inc(
+                    m.memo_foreign_hits)
+    reg.gauge("repro_fleet_latency_p99_seconds",
+              "Last fleet run's p99 router-observed latency").set(
+                  m.latency_p99_s)
+    reg.gauge("repro_fleet_throughput_scenarios_per_second",
+              "Last fleet run's aggregate throughput").set(
+                  m.scenarios_per_sec)

@@ -39,6 +39,7 @@ import numpy as np
 from repro.fleet.metrics import compute_fleet_metrics
 from repro.fleet.worker import (decode_array, encode_prepared,
                                 encode_request)
+from repro.obs import NULL_TRACER, as_obs_config, get_tracer
 from repro.stream.admission import AdmissionQueues
 
 
@@ -128,8 +129,13 @@ class FleetRouter:
     def __init__(self, workers, inbox: "queue.Queue",
                  chunk_rows: int = 16, max_outstanding: int = 2,
                  steal: bool = True, default_budget: int = 2_000,
-                 stream: Optional[Dict] = None):
+                 stream: Optional[Dict] = None, obs=None):
         stream = stream or {}
+        self.obs = as_obs_config(obs)
+        # the router traces on the process-wide tracer (its clock is
+        # process-epoch, not the run-relative service clock — router
+        # spans are infra, scoped by uid only where one exists)
+        self.tracer = get_tracer() if self.obs.enabled else NULL_TRACER
         self.chunk_rows = int(chunk_rows)
         self.max_outstanding = int(max_outstanding)
         self.steal = bool(steal)
@@ -208,27 +214,35 @@ class FleetRouter:
         budget = min(self.chunk_rows,
                      max(victim.queues.batch_rows,
                          victim.queues.depth // 2))
-        moved = victim.queues.steal(budget, self._clock())
-        if not moved:
-            return
-        self.steals += 1
-        for key, members in moved:
-            self.stolen_members += len(members)
-            self._home[key] = self.wq.index(thief)   # future arrivals too
-            for m in members:
-                thief.queues.push(key, m)
+        with self.tracer.span("fleet.steal", thief=thief.worker_id,
+                              victim=victim.worker_id) as sp:
+            moved = victim.queues.steal(budget, self._clock())
+            if not moved:
+                sp.set(members=0)
+                return
+            self.steals += 1
+            n = 0
+            for key, members in moved:
+                n += len(members)
+                self.stolen_members += len(members)
+                self._home[key] = self.wq.index(thief)  # future arrivals too
+                for m in members:
+                    thief.queues.push(key, m)
+            sp.set(members=n)
         victim.queues.check()
         thief.queues.check()
 
     def _ship(self, w: WorkerQueue, members: List[_Held]) -> None:
         self._chunk_id += 1
-        msg = {"cmd": "run", "chunk": self._chunk_id,
-               "requests": [m.payload for m in members
-                            if m.kind == "request"],
-               "prepared": [m.payload for m in members
-                            if m.kind == "prepared"]}
-        self._chunk_members[(w.worker_id, self._chunk_id)] = members
-        w.handle.send(msg)
+        with self.tracer.span("fleet.ship", worker=w.worker_id,
+                              chunk=self._chunk_id, members=len(members)):
+            msg = {"cmd": "run", "chunk": self._chunk_id,
+                   "requests": [m.payload for m in members
+                                if m.kind == "request"],
+                   "prepared": [m.payload for m in members
+                                if m.kind == "prepared"]}
+            self._chunk_members[(w.worker_id, self._chunk_id)] = members
+            w.handle.send(msg)
         w.handle.outstanding += 1
         w.sent += len(members)
 
@@ -309,6 +323,9 @@ class FleetRouter:
     def _decode(self, wid: str, members: List[_Held], msg: Dict
                 ) -> List[FleetResult]:
         done = self._clock()
+        sp = self.tracer.span("fleet.route", worker=wid,
+                              chunk=msg.get("chunk"),
+                              members=len(members))
         by_uid = {m.request.uid: m for m in members}
         out = []
         for d in msg["results"]:
@@ -324,6 +341,7 @@ class FleetRouter:
                 warm_seeded=d["warm_seeded"],
                 anytime_interim=d["anytime_interim"],
                 arrival_s=m.request.arrival_s, done_s=done))
+        sp.finish()
         return out
 
     def _worker_stats(self) -> Dict[str, Dict]:

@@ -11,7 +11,8 @@ bit-identical to a standalone single-host row.
 
 Wire protocol (JSON lines)
 --------------------------
-Parent -> worker (stdin): ``{"cmd": "init"|"run"|"stop", ...}``.
+Parent -> worker (stdin): ``{"cmd": "init"|"run"|"warmup"|"stats"|
+"warm_boundary"|"stop", ...}``.
 Worker -> parent (stdout): lines prefixed ``@fleet `` — anything else
 on stdout (library prints, banners) is ignored by the parent, so a
 chatty dependency cannot corrupt the protocol.  Arrays cross as
@@ -163,10 +164,31 @@ class _Worker:
             self.memo = ScheduleMemo(ShardedMemoStore(memo_path),
                                      near=bool(init.get("memo_near", False)),
                                      origin=self.worker_id)
-        stream = StreamConfig(**(init.get("stream") or {}))
+        stream_d = dict(init.get("stream") or {})
+        obs = init.get("obs")
+        if obs:
+            # the fleet's ObsConfig rides the init message as a dict;
+            # per-worker defaults: spans carry THIS worker's id, and the
+            # ring accumulates across chunks (each chunk is one service
+            # run — clearing per run would keep only the last chunk)
+            obs = dict(obs)
+            obs.setdefault("worker", self.worker_id)
+            obs["clear_per_run"] = bool(obs.get("clear_per_run", False))
+            stream_d["obs"] = obs
+        stream = StreamConfig(**stream_d)
         self.svc = StreamingScheduler(strategy=init.get("strategy"),
                                       budget=int(init.get("budget", 2000)),
                                       stream=stream, memo=self.memo)
+        self.guard = None
+        if init.get("recompile_guard"):
+            # process-lifetime observer: entered once, never exited (the
+            # process exit tears the logging handler down with it); the
+            # router marks the warmup boundary via the "warm_boundary"
+            # command, after which stats report any violations
+            from repro.lint.runtime import RecompileGuard
+            self.guard = RecompileGuard(label=self.worker_id).__enter__()
+            if self.svc.flight is not None:
+                self.svc.flight.attach_guard(self.guard)
         self.chunks = 0
         self.scenarios = 0
         self.run_wall_s = 0.0
@@ -199,13 +221,32 @@ class _Worker:
                "results": [encode_result(r) for r in results],
                "wall_s": wall})
 
+    def handle_warmup(self, msg: Dict) -> None:
+        """Exhaustive precompilation: the service's own ``warmup`` over a
+        decoded trace compiles EVERY bucket size greedy admission could
+        hit — a plain warm run only compiles the buckets its own dynamic
+        batching happened to produce."""
+        self.svc.warmup([decode_request(d)
+                         for d in msg.get("requests", ())])
+        _emit({"ok": "warmed"})
+
+    def warm_boundary(self) -> None:
+        """Everything compiled so far was deliberate warmup; from here a
+        compile is a violation the stats will report."""
+        if self.guard is not None:
+            self.guard.warmup()
+
     def stats(self) -> Dict:
         memo = (self.memo.stats.summary() if self.memo is not None else {})
-        return {"worker": self.worker_id, "chunks": self.chunks,
-                "scenarios": self.scenarios, "run_wall_s": self.run_wall_s,
-                "peak_depth": self.peak_depth,
-                "early_flushes": self.early_flushes,
-                "refinements": self.refinements, "memo": memo}
+        d = {"worker": self.worker_id, "chunks": self.chunks,
+             "scenarios": self.scenarios, "run_wall_s": self.run_wall_s,
+             "peak_depth": self.peak_depth,
+             "early_flushes": self.early_flushes,
+             "refinements": self.refinements, "memo": memo}
+        if self.guard is not None:
+            d["compiles"] = len(self.guard.compiles)
+            d["recompiles_post_warmup"] = len(self.guard.post_warmup)
+        return d
 
 
 def main() -> int:
@@ -224,6 +265,12 @@ def main() -> int:
             elif cmd == "stats":
                 _emit({"ok": "stats", "stats": worker.stats()
                        if worker is not None else {}})
+            elif cmd == "warmup":
+                worker.handle_warmup(msg)
+            elif cmd == "warm_boundary":
+                if worker is not None:
+                    worker.warm_boundary()
+                _emit({"ok": "warm"})
             elif cmd == "stop":
                 _emit({"ok": "stopped", "stats": worker.stats()
                        if worker is not None else {}})

@@ -34,9 +34,25 @@ import contextlib
 import logging
 import re
 import threading
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 __all__ = ["RecompileError", "RecompileGuard", "transfer_sanitizer"]
+
+
+def _count_compile(label: str, post_warmup: bool) -> None:
+    """Publish every observed compile to the obs registry.  Lazy import
+    (``repro.obs`` imports nothing from here at module scope, but this
+    module must stay importable without obs) and never raises: the
+    guard runs inside a logging handler."""
+    try:
+        from repro.obs.registry import get_registry
+        get_registry().counter(
+            "repro_jit_compiles_total",
+            "jit compilations observed by RecompileGuard",
+        ).inc(phase="post_warmup" if post_warmup else "warmup",
+              guard=label or "unlabeled")
+    except Exception:
+        pass
 
 
 class RecompileError(RuntimeError):
@@ -94,11 +110,26 @@ class RecompileGuard:
         self._lock = threading.Lock()
         self._listener: Optional[_CompileListener] = None
         self._saved: List = []
+        self._callbacks: List[Callable[[str, bool], None]] = []
+
+    def add_listener(self, fn: Callable[[str, bool], None]) -> None:
+        """Register ``fn(executable_name, post_warmup)`` to run on every
+        recorded compile (the obs flight recorder hooks in here)."""
+        with self._lock:
+            self._callbacks.append(fn)
 
     # -- listener plumbing ----------------------------------------------------
     def _record_compile(self, name: str) -> None:
         with self._lock:
             self.compiles.append(name)
+            post = self._boundary is not None
+            callbacks = list(self._callbacks)
+        _count_compile(self.label, post)
+        for fn in callbacks:
+            try:
+                fn(name, post)
+            except Exception:       # never raise from the log handler
+                pass
 
     def __enter__(self) -> "RecompileGuard":
         self._listener = _CompileListener(self)

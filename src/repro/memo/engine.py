@@ -42,6 +42,7 @@ from repro.core.strategies.base import WarmStart
 from repro.memo.fingerprint import (family_key, feature_vector,
                                     search_fingerprint, strategy_signature)
 from repro.memo.store import MemoRecord, MemoStore
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -148,6 +149,9 @@ class ScheduleMemo:
         self.origin = origin
         self.stats = MemoStats()
         self._lock = threading.Lock()
+        # Span tracer (repro.obs): the stream service swaps in its own
+        # when observability is on; the default never records.
+        self.tracer = NULL_TRACER
 
     # -- key plumbing ---------------------------------------------------------
     @staticmethod
@@ -176,7 +180,8 @@ class ScheduleMemo:
 
     # -- exact hit ------------------------------------------------------------
     def lookup(self, fit, strategy, budget: int, seed_or_key,
-               include_warm: bool = True) -> Optional[MemoHit]:
+               include_warm: bool = True,
+               scope: Optional[int] = None) -> Optional[MemoHit]:
         """Replay of a previously solved row, or None.
 
         A hit replays the stored schedule bit-for-bit.  When the stored
@@ -187,37 +192,45 @@ class ScheduleMemo:
         be re-searched just because its first solve was seeded).
         ``include_warm=False`` restricts hits to cold records.
         """
-        fp = self.fingerprint(fit, strategy, budget, seed_or_key)
-        rec = self.store.get(fp)
-        if rec is not None and rec.meta.get("warm_seeded") \
-                and not include_warm:
-            rec = None
-        with self._lock:
-            if rec is None:
-                self.stats.misses += 1
-                return None
-            self.stats.exact_hits += 1
-            if rec.meta.get("origin") is not None \
-                    and rec.meta.get("origin") != self.origin:
-                self.stats.foreign_hits += 1
-        return MemoHit(
-            fingerprint=fp,
-            best_fitness=float(
-                np.asarray(rec.arrays["best_fitness"]).reshape(-1)[0]),
-            best_accel=rec.arrays["best_accel"],
-            best_prio=rec.arrays["best_prio"],
-            history_best=rec.arrays["history_best"],
-            generations=int(rec.meta.get(
-                "generations", len(rec.arrays["history_best"]))),
-            n_samples=int(rec.meta.get("n_samples", 0)),
-            warm_seeded=bool(rec.meta.get("warm_seeded", False)),
-            population=((rec.arrays["pop_accel"], rec.arrays["pop_prio"])
-                        if rec.has_population else None),
-        )
+        sp = self.tracer.span("memo.lookup", scope=scope)
+        with sp:
+            fp = self.fingerprint(fit, strategy, budget, seed_or_key)
+            rec = self.store.get(fp)
+            if rec is not None and rec.meta.get("warm_seeded") \
+                    and not include_warm:
+                rec = None
+            foreign = False
+            with self._lock:
+                if rec is None:
+                    self.stats.misses += 1
+                    sp.set(outcome="miss")
+                    return None
+                self.stats.exact_hits += 1
+                if rec.meta.get("origin") is not None \
+                        and rec.meta.get("origin") != self.origin:
+                    self.stats.foreign_hits += 1
+                    foreign = True
+            sp.set(outcome="foreign_hit" if foreign else "hit")
+            return MemoHit(
+                fingerprint=fp,
+                best_fitness=float(
+                    np.asarray(rec.arrays["best_fitness"]).reshape(-1)[0]),
+                best_accel=rec.arrays["best_accel"],
+                best_prio=rec.arrays["best_prio"],
+                history_best=rec.arrays["history_best"],
+                generations=int(rec.meta.get(
+                    "generations", len(rec.arrays["history_best"]))),
+                n_samples=int(rec.meta.get("n_samples", 0)),
+                warm_seeded=bool(rec.meta.get("warm_seeded", False)),
+                population=((rec.arrays["pop_accel"],
+                             rec.arrays["pop_prio"])
+                            if rec.has_population else None),
+            )
 
     # -- near hit -------------------------------------------------------------
     def warm_start(self, fit, strategy, family: str = "",
-                   exclude: Optional[str] = None) -> Optional[WarmStart]:
+                   exclude: Optional[str] = None,
+                   scope: Optional[int] = None) -> Optional[WarmStart]:
         """Nearest-fingerprint population transfer, or None.
 
         Only strategies that accept an ``init_population``
@@ -234,38 +247,48 @@ class ScheduleMemo:
         ``init``.  ``exclude`` skips one fingerprint (a row should not
         seed itself when record-then-research patterns replay a trace).
         """
-        strategy = strategy.bind(fit.num_accels)
-        if not (self.near and strategy.supports_init_population):
-            return None
-        fam = family_key(fit.params, strategy, use_kernel=fit.use_kernel,
-                         objective=fit.objective, family=family)
-        cands = [r for r in self.store.family(fam)
-                 if r.has_population and r.fingerprint != exclude]
-        if not cands:
-            return None
-        feats = feature_vector(fit.params)
-        best, best_d = None, np.inf
-        for r in cands:           # insertion order: on ties, newest wins
-            rf = r.features
-            d = (float(np.linalg.norm(rf - feats))
-                 if rf is not None and rf.shape == feats.shape
-                 else np.inf)     # population-only record (no tables seen)
-            if best is None or d <= best_d:
-                best, best_d = r, d
-        if self.max_donor_dist is not None and \
-                not best_d <= self.max_donor_dist:
-            return None            # guard: too far to trust — cold init
-        with self._lock:
-            self.stats.near_hits += 1
-        P = strategy.ask_size
-        accel = _resize_rows(best.arrays["pop_accel"], P).astype(np.int32)
-        prio = _resize_rows(best.arrays["pop_prio"], P).astype(np.float32)
-        return WarmStart(accel=accel, prio=prio,
-                         jitter=np.float32(self.jitter))
+        sp = self.tracer.span("memo.warm_start", scope=scope)
+        with sp:
+            strategy = strategy.bind(fit.num_accels)
+            if not (self.near and strategy.supports_init_population):
+                sp.set(outcome="unsupported")
+                return None
+            fam = family_key(fit.params, strategy,
+                             use_kernel=fit.use_kernel,
+                             objective=fit.objective, family=family)
+            cands = [r for r in self.store.family(fam)
+                     if r.has_population and r.fingerprint != exclude]
+            if not cands:
+                sp.set(outcome="no_donor")
+                return None
+            feats = feature_vector(fit.params)
+            best, best_d = None, np.inf
+            for r in cands:       # insertion order: on ties, newest wins
+                rf = r.features
+                d = (float(np.linalg.norm(rf - feats))
+                     if rf is not None and rf.shape == feats.shape
+                     else np.inf)  # population-only record (no tables)
+                if best is None or d <= best_d:
+                    best, best_d = r, d
+            if self.max_donor_dist is not None and \
+                    not best_d <= self.max_donor_dist:
+                sp.set(outcome="refused")  # too far to trust — cold init
+                return None
+            with self._lock:
+                self.stats.near_hits += 1
+            sp.set(outcome="seeded")
+            P = strategy.ask_size
+            accel = _resize_rows(best.arrays["pop_accel"],
+                                 P).astype(np.int32)
+            prio = _resize_rows(best.arrays["pop_prio"],
+                                P).astype(np.float32)
+            return WarmStart(accel=accel, prio=prio,
+                             jitter=np.float32(self.jitter))
 
     # -- recording ------------------------------------------------------------
     def record(self, fit, strategy, budget: int, seed_or_key, row,
-               population=None, family: str = "", warm=None) -> str:
+               population=None, family: str = "", warm=None,
+               scope: Optional[int] = None) -> str:
         """Store one solved row (idempotent per fingerprint).
 
         ``row`` is anything with ``best_fitness`` / ``best_accel`` /
@@ -281,38 +304,41 @@ class ScheduleMemo:
         the store upgrades toward the strict guarantee.  Returns the
         fingerprint.
         """
-        strategy = strategy.bind(fit.num_accels)
-        generations, evolve_last, P = self._protocol(strategy, budget)
-        fp = self.fingerprint(fit, strategy, budget, seed_or_key)
-        get = (row.get if isinstance(row, dict)
-               else lambda k: getattr(row, k))
-        arrays = {
-            "best_fitness": np.asarray(get("best_fitness"),
-                                       dtype=np.float32),
-            "best_accel": np.asarray(get("best_accel")),
-            "best_prio": np.asarray(get("best_prio")),
-            "history_best": np.asarray(get("history_best")),
-            "features": feature_vector(fit.params),
-        }
-        if population is not None:
-            pa, pp = population
-            arrays["pop_accel"] = np.asarray(pa)
-            arrays["pop_prio"] = np.asarray(pp)
-        fam = family_key(fit.params, strategy, use_kernel=fit.use_kernel,
-                         objective=fit.objective, family=family)
-        self.store.put(MemoRecord(
-            fingerprint=fp, family=fam, arrays=arrays,
-            meta={"strategy": strategy_signature(strategy),
-                  "generations": generations,
-                  "evolve_last": evolve_last,
-                  "n_samples": generations * P,
-                  "budget": int(budget),
-                  "family": family,
-                  "warm_seeded": warm is not None,
-                  "origin": self.origin}))
-        with self._lock:
-            self.stats.records += 1
-        return fp
+        with self.tracer.span("memo.record", scope=scope,
+                              warm_seeded=warm is not None):
+            strategy = strategy.bind(fit.num_accels)
+            generations, evolve_last, P = self._protocol(strategy, budget)
+            fp = self.fingerprint(fit, strategy, budget, seed_or_key)
+            get = (row.get if isinstance(row, dict)
+                   else lambda k: getattr(row, k))
+            arrays = {
+                "best_fitness": np.asarray(get("best_fitness"),
+                                           dtype=np.float32),
+                "best_accel": np.asarray(get("best_accel")),
+                "best_prio": np.asarray(get("best_prio")),
+                "history_best": np.asarray(get("history_best")),
+                "features": feature_vector(fit.params),
+            }
+            if population is not None:
+                pa, pp = population
+                arrays["pop_accel"] = np.asarray(pa)
+                arrays["pop_prio"] = np.asarray(pp)
+            fam = family_key(fit.params, strategy,
+                             use_kernel=fit.use_kernel,
+                             objective=fit.objective, family=family)
+            self.store.put(MemoRecord(
+                fingerprint=fp, family=fam, arrays=arrays,
+                meta={"strategy": strategy_signature(strategy),
+                      "generations": generations,
+                      "evolve_last": evolve_last,
+                      "n_samples": generations * P,
+                      "budget": int(budget),
+                      "family": family,
+                      "warm_seeded": warm is not None,
+                      "origin": self.origin}))
+            with self._lock:
+                self.stats.records += 1
+            return fp
 
     def __len__(self) -> int:
         return len(self.store)

@@ -27,6 +27,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.fitness import FitnessFn
 from repro.core.job_analyzer import JobAnalyzer
+from repro.obs.trace import NULL_TRACER
 from repro.stream.workloads import ScenarioRequest
 
 GB = 1024 ** 3
@@ -90,6 +91,9 @@ class ReadyScenario:
                                  # recorded to the memo, never routed —
                                  # ranks below every priority class so it
                                  # soaks only device slack
+    admitted_s: float = 0.0      # when admission pushed it to the device
+                                 # queue (0.0 until then) — the start of
+                                 # the obs queue_wait span
 
     @property
     def analysis_wall_s(self) -> float:
@@ -103,9 +107,12 @@ class AnalysisPool:
     whatever the workers finish, which is exactly what the admission
     stage wants (it batches whoever is ready).  ``clock`` maps
     ``time.perf_counter()`` to the service's relative timeline.
+    ``tracer`` (a ``repro.obs`` span tracer) gets one ``analyze`` span
+    per scenario — emitted from the worker threads, which is exactly
+    the concurrency the tracer's lock exists for.
     """
 
-    def __init__(self, workers: int = 2, clock=None):
+    def __init__(self, workers: int = 2, clock=None, tracer=None):
         self.workers = int(workers)
         self._pool = ThreadPoolExecutor(max_workers=self.workers,
                                         thread_name_prefix="stream-analysis",
@@ -115,6 +122,7 @@ class AnalysisPool:
         self._analyzers: Dict[Tuple[str, bool], JobAnalyzer] = {}  # @locked:_lock
         self._lock = threading.Lock()
         self._clock = clock or time.perf_counter
+        self._tracer = tracer if tracer is not None else NULL_TRACER
 
     def analyzer_for(self, setting: str, flexible: bool = False
                      ) -> JobAnalyzer:
@@ -158,8 +166,13 @@ class AnalysisPool:
         table = analyzer.analyze(jobs)
         fit = FitnessFn(table, bw_sys=req.bw_gb * GB,
                         objective=req.objective)
+        t1 = self._clock()
+        if self._tracer.enabled:
+            self._tracer.emit("analyze", t0, t1, scope=req.uid,
+                              setting=req.setting, mix=req.mix,
+                              fresh=fresh_analyzer)
         return ReadyScenario(request=req, fit=fit, analysis_start_s=t0,
-                             ready_s=self._clock())
+                             ready_s=t1)
 
     def submit(self, req: ScenarioRequest) -> "Future[ReadyScenario]":
         return self._pool.submit(self.analyze, req)

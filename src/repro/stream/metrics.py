@@ -21,32 +21,19 @@ direction to be optimistic in for a tail metric.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List
 
 import numpy as np
 
+# canonical home is repro.obs.stats now (one tail-math implementation
+# for stream, fleet, and trace summaries); re-exported here so existing
+# `from repro.stream.metrics import p99_s` call sites keep working
+from repro.obs.stats import interval_union_s, p99_s
+from repro.obs.registry import get_registry
 from repro.stream.workloads import PRIORITY_CLASSES
 
-
-def interval_union_s(intervals: Sequence[Tuple[float, float]]) -> float:
-    """Total length covered by a set of [start, end] intervals."""
-    total, last_end = 0.0, -np.inf
-    for start, end in sorted(intervals):
-        if end <= last_end:
-            continue
-        total += end - max(start, last_end)
-        last_end = end
-    return total
-
-
-def p99_s(lats) -> float:
-    """Tail-conservative p99: the smallest OBSERVED latency >= the 99th
-    percentile (``method="higher"``), never an interpolated value below
-    the worst sample.  0.0 on empty input."""
-    lats = np.asarray(lats, dtype=np.float64)
-    if not len(lats):
-        return 0.0
-    return float(np.percentile(lats, 99, method="higher"))
+__all__ = ["StreamMetrics", "compute_metrics", "interval_union_s",
+           "p99_s"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,7 +108,7 @@ def compute_metrics(results, batches, wall_s: float,
             with_deadline += 1
             misses += r.latency_s > deadline
 
-    return StreamMetrics(
+    m = StreamMetrics(
         num_scenarios=len(results),
         wall_s=wall_s,
         scenarios_per_sec=len(results) / wall,
@@ -159,3 +146,36 @@ def compute_metrics(results, batches, wall_s: float,
                        if admission is not None else 0),
         stolen_members=(admission.stolen if admission is not None else 0),
     )
+    _publish(m, lats)
+    return m
+
+
+def _publish(m: StreamMetrics, lats) -> None:
+    """Roll the run's metrics up into the process-wide obs registry
+    (additive on top of the returned dataclass, which stays the
+    byte-compatible programmatic surface).  Counters accumulate across
+    runs; gauges hold the latest run's values."""
+    reg = get_registry()
+    reg.counter("repro_stream_scenarios_total",
+                "Scenarios routed by the stream service").inc(
+                    m.num_scenarios)
+    reg.counter("repro_stream_deadline_misses_total",
+                "Deadline-carrying schedules routed late").inc(
+                    m.deadline_misses)
+    reg.counter("repro_stream_memo_hits_total",
+                "Schedule-memo wins by kind").inc(
+                    m.memo_exact_hits, kind="exact")
+    reg.counter("repro_stream_memo_hits_total",
+                "Schedule-memo wins by kind").inc(
+                    m.memo_warm_hits, kind="warm")
+    reg.gauge("repro_stream_latency_p99_seconds",
+              "Last run's p99 schedule latency").set(m.latency_p99_s)
+    reg.gauge("repro_stream_throughput_scenarios_per_second",
+              "Last run's sustained scenario throughput").set(
+                  m.scenarios_per_sec)
+    reg.gauge("repro_stream_device_idle_fraction",
+              "Last run's device-idle fraction").set(m.device_idle_frac)
+    hist = reg.histogram("repro_stream_latency_seconds",
+                         "Per-scenario schedule latency")
+    for lat in lats:
+        hist.observe(float(lat))

@@ -57,6 +57,9 @@ from repro.core.pareto import ParetoFront, pareto_front
 from repro.core.strategies import SearchStrategy, WarmStart, plan_generations
 from repro.core.sweep import _pad_rows, _resolve_strategy, row_executable
 from repro.lint.runtime import transfer_sanitizer
+from repro.obs import (FlightRecorder, NULL_SPAN, NULL_TRACER, ObsConfig,
+                       RunClock, Tracer, as_obs_config)
+from repro.obs import capture as _flight_capture
 from repro.stream.admission import AdmissionQueues
 from repro.stream.analysis import AnalysisPool, ReadyScenario
 from repro.stream.metrics import StreamMetrics, compute_metrics
@@ -120,6 +123,15 @@ class StreamConfig:
                       Host-side batch assembly (key/param stacking)
                       happens before the guarded region.  Off by
                       default (sanitizer, not behavior)
+    obs               observability (``repro.obs.ObsConfig``, a plain
+                      dict of its fields — the form fleet workers get
+                      over the wire — or None = disabled).  Enabled, the
+                      service traces one span tree per scenario
+                      (admit/analyze/queue_wait/dispatch/device/route +
+                      memo spans), runs a flight recorder, and feeds the
+                      process metrics registry.  All host-side: spans
+                      never wrap jitted code, schedules stay
+                      bit-identical (perf_obs gates <3% overhead)
     """
     batch_rows: int = 8
     analysis_workers: int = 2
@@ -131,6 +143,7 @@ class StreamConfig:
     slo_margin_s: float = 0.05
     anytime_budget: Optional[int] = None
     transfer_guard: bool = False
+    obs: Union[ObsConfig, Dict, None] = None
 
     def __post_init__(self):
         for field in ("batch_rows", "analysis_workers", "max_inflight"):
@@ -154,6 +167,7 @@ class StreamConfig:
                 raise ValueError("anytime_budget needs slo_aware=True: "
                                  "the interim/refinement split is part of "
                                  "deadline-aware admission")
+        as_obs_config(self.obs)      # validate shape/values early
 
 
 class CompatKey(NamedTuple):
@@ -307,9 +321,24 @@ class StreamingScheduler:
                 f"strategy {self._strategy.name!r} is host-only; the "
                 "streaming service batches scenarios onto the device fleet "
                 "and cannot run host-loop searches")
-        self._t0 = time.perf_counter()
+        # run-relative clock shared by result timestamps AND the span
+        # tracer, so a trace file lines up with StreamResult fields
+        self.clock = RunClock()
+        self.obs = as_obs_config(self.stream.obs)
+        if self.obs.enabled:
+            self.tracer = Tracer(capacity=self.obs.trace_capacity,
+                                 clock=self.clock, worker=self.obs.worker)
+            self.flight: Optional[FlightRecorder] = FlightRecorder(
+                max_events=self.obs.flight_events,
+                dump_dir=self.obs.flight_dir,
+                worker=self.obs.worker, clock=self.clock)
+            if self.memo is not None:
+                self.memo.tracer = self.tracer
+        else:
+            self.tracer = NULL_TRACER
+            self.flight = None
         self.pool = AnalysisPool(self.stream.analysis_workers,
-                                 clock=self._clock)
+                                 clock=self._clock, tracer=self.tracer)
         self.last_metrics: Optional[StreamMetrics] = None
         self.last_batches: List[_BatchRecord] = []   # @locked:_run_lock
         self._refined = 0            # @locked:_run_lock  silent refinements
@@ -324,7 +353,16 @@ class StreamingScheduler:
 
     # -- clock ----------------------------------------------------------------
     def _clock(self) -> float:
-        return time.perf_counter() - self._t0
+        return self.clock()
+
+    def _begin_run(self) -> None:
+        """Reset per-run state: the clock zero, batch records, and (when
+        observability is on) the span buffer.  @holds:_run_lock"""
+        self.clock.reset()
+        self.last_batches = []
+        self._refined = 0
+        if self.obs.enabled and self.obs.clear_per_run:
+            self.tracer.clear()
 
     # -- admission helpers ----------------------------------------------------
     def _resolve_override(self, strategy) -> SearchStrategy:
@@ -378,6 +416,8 @@ class StreamingScheduler:
     def _dispatch(self, compat_key: CompatKey, members: List[ReadyScenario]
                   ) -> _Inflight:
         base, G, A, use_kernel, objective, budget, is_warm = compat_key
+        warm_seeded = bool(is_warm)     # compat-key flag, not key material
+        t_dispatch = self.tracer.now() if self.tracer.enabled else 0.0
         strategy = base.bind(A)
         generations, evolve_last = plan_generations(budget,
                                                     strategy.ask_size)
@@ -401,8 +441,9 @@ class StreamingScheduler:
 
         fn, target = row_executable(
             strategy, generations, evolve_last, G, use_kernel, objective,
-            ndev, keep_population=self._keep_population(base), warm=is_warm)
-        if is_warm:
+            ndev, keep_population=self._keep_population(base),
+            warm=warm_seeded)
+        if warm_seeded:
             warm = WarmStart(
                 accel=np.stack([np.asarray(m.warm.accel) for m in members]),
                 prio=np.stack([np.asarray(m.warm.prio) for m in members]),
@@ -414,13 +455,30 @@ class StreamingScheduler:
         with transfer_sanitizer(self.stream.transfer_guard):
             keys_d = jax.device_put(keys, target)
             params_d = jax.device_put(params, target)
-            if is_warm:
+            if warm_seeded:
                 out = fn(keys_d, params_d, jax.device_put(warm, target))
             else:
                 out = fn(keys_d, params_d)  # async: returns immediately
-        return _Inflight(out=out, members=members, dispatch_s=self._clock(),
-                         padded_rows=padded, num_devices=ndev,
-                         compat_key=compat_key)
+        inf = _Inflight(out=out, members=members, dispatch_s=self._clock(),
+                        padded_rows=padded, num_devices=ndev,
+                        compat_key=compat_key)
+        if self.tracer.enabled:
+            # host-side stamps only — the device work was launched above
+            # and its span is emitted at route time, when its end is known
+            for m in members:
+                uid = m.request.uid
+                self.tracer.emit("queue_wait",
+                                 m.admitted_s or m.ready_s, t_dispatch,
+                                 scope=uid)
+                self.tracer.emit("dispatch", t_dispatch, inf.dispatch_s,
+                                 scope=uid, rows=len(members),
+                                 bucket=padded, devices=ndev,
+                                 warm=warm_seeded)
+            if self.flight is not None:
+                self.flight.note("dispatch", rows=len(members),
+                                 bucket=padded, devices=ndev,
+                                 uids=[m.request.uid for m in members])
+        return inf
 
     def _prepared_ready(self, p: PreparedScenario) -> ReadyScenario:
         """A client-supplied scenario as an admission-queue entry (the
@@ -455,7 +513,7 @@ class StreamingScheduler:
                 # interim schedule
                 self._refined += 1
             else:
-                results.append(StreamResult(
+                res = StreamResult(
                     request=m.request,
                     best_fitness=float(bf[i]),
                     best_accel=ba[i], best_prio=bp[i], history_best=hist[i],
@@ -471,7 +529,14 @@ class StreamingScheduler:
                     final_population=(Population(accel=pops[0][i],
                                                  prio=pops[1][i])
                                       if pops is not None else None),
-                ))
+                )
+                results.append(res)
+                if self.flight is not None \
+                        and res.deadline_met is False \
+                        and self.obs.dump_on_deadline_miss:
+                    self.flight.on_deadline_miss(
+                        m.request.uid, res.latency_s,
+                        m.request.deadline_s)
             if self.memo is not None:
                 self.memo.record(
                     m.fit, strategy, budget, m.request.seed,
@@ -479,11 +544,24 @@ class StreamingScheduler:
                      "best_prio": bp[i], "history_best": hist[i]},
                     population=((pops[0][i], pops[1][i])
                                 if pops is not None else None),
-                    family=m.request.mix, warm=m.warm)
+                    family=m.request.mix, warm=m.warm,
+                    scope=m.request.uid)
         self.last_batches.append(_BatchRecord(
             dispatch_s=inf.dispatch_s, done_s=done, rows=len(inf.members),
             padded_rows=inf.padded_rows, num_devices=inf.num_devices,
             compat_key=inf.compat_key))
+        if self.tracer.enabled:
+            t_routed = self.tracer.now()
+            for m in inf.members:
+                uid = m.request.uid
+                self.tracer.emit("device", inf.dispatch_s, done,
+                                 scope=uid, rows=len(inf.members),
+                                 devices=inf.num_devices)
+                self.tracer.emit("route", done, t_routed, scope=uid,
+                                 silent=m.silent)
+            if self.flight is not None:
+                self.flight.note("route", rows=len(inf.members),
+                                 device_s=done - inf.dispatch_s)
 
     # -- the pipeline ---------------------------------------------------------
     def run(self,
@@ -496,13 +574,81 @@ class StreamingScheduler:
         time (per-run clock/metrics state); concurrent callers serialize.
         """
         with self._run_lock:
-            return self._run(requests, prepared)
+            with _flight_capture(self.flight, "stream.run"):
+                return self._run(requests, prepared)
+
+    def _admit(self, ready: ReadyScenario, queues: AdmissionQueues,
+               results: List[StreamResult], sp) -> None:
+        """Admission of one analyzed scenario: memo consult, anytime
+        split, queue push.  ``sp`` is the open ``admit`` span (outcome
+        args land on it; the no-op handle when tracing is off).
+        @holds:_run_lock"""
+        uid = ready.request.uid
+        budget = ready.request.budget or self.budget
+        if self.memo is not None:
+            strategy = self._resolve_override(ready.strategy)
+            hit = self.memo.lookup(ready.fit, strategy, budget,
+                                   ready.request.seed, scope=uid)
+            if hit is not None:
+                # exact hit: the stored schedule IS the answer,
+                # bit-for-bit — no device dispatch, the request never
+                # enters a queue (dispatch_s == done_s == now)
+                now = self._clock()
+                results.append(StreamResult(
+                    request=ready.request,
+                    best_fitness=float(hit.best_fitness),
+                    best_accel=np.asarray(hit.best_accel),
+                    best_prio=np.asarray(hit.best_prio),
+                    history_best=np.asarray(hit.history_best),
+                    n_samples=hit.n_samples,
+                    arrival_s=ready.request.arrival_s,
+                    analysis_start_s=ready.analysis_start_s,
+                    ready_s=ready.ready_s,
+                    dispatch_s=now, done_s=now,
+                    memo_exact=True,
+                    # provenance, not a second hit: the counters
+                    # treat exact and warm as disjoint (exact wins)
+                    warm_seeded=hit.warm_seeded,
+                    budget=budget,
+                    final_population=(
+                        None if hit.population is None else
+                        Population(accel=hit.population[0],
+                                   prio=hit.population[1])),
+                ))
+                sp.set(outcome="memo_exact")
+                return
+            # miss: seed from the nearest stored scenario of the
+            # same transfer family, when one exists (the memo's
+            # donor-distance guard refuses far donors — cold init)
+            ready.warm = self.memo.warm_start(
+                ready.fit, strategy, family=ready.request.mix,
+                scope=uid)
+        anytime = self.stream.anytime_budget
+        if anytime is not None and anytime < budget \
+                and ready.request.deadline_s is not None:
+            # anytime split: the caller gets a short-budget interim
+            # schedule fast; a silent full-budget twin refines in
+            # the background and lands in the memo, upgrading the
+            # NEXT arrival of this scenario to an exact replay of
+            # the refined schedule
+            interim = dataclasses.replace(
+                ready,
+                request=dataclasses.replace(ready.request,
+                                            budget=anytime),
+                anytime=True)
+            if self.tracer.enabled:
+                interim.admitted_s = self._clock()
+            queues.push(self._compat_key(interim), interim)
+            ready.silent = True
+        if self.tracer.enabled:
+            ready.admitted_s = self._clock()
+        queues.push(self._compat_key(ready), ready)
+        sp.set(outcome="queued", warm=ready.warm is not None,
+               split=ready.silent)
 
     def _run(self, requests, prepared) -> List[StreamResult]:
         """The pipeline body (entered by ``run()``).  @holds:_run_lock"""
-        self._t0 = time.perf_counter()
-        self.last_batches = []
-        self._refined = 0
+        self._begin_run()
         realtime = self.stream.realtime
 
         to_submit = deque(sorted(requests, key=lambda r: (r.arrival_s, r.uid)))
@@ -513,59 +659,11 @@ class StreamingScheduler:
         results: List[StreamResult] = []
 
         def admit(ready: ReadyScenario):
-            budget = ready.request.budget or self.budget
-            if self.memo is not None:
-                strategy = self._resolve_override(ready.strategy)
-                hit = self.memo.lookup(ready.fit, strategy, budget,
-                                       ready.request.seed)
-                if hit is not None:
-                    # exact hit: the stored schedule IS the answer,
-                    # bit-for-bit — no device dispatch, the request never
-                    # enters a queue (dispatch_s == done_s == now)
-                    now = self._clock()
-                    results.append(StreamResult(
-                        request=ready.request,
-                        best_fitness=float(hit.best_fitness),
-                        best_accel=np.asarray(hit.best_accel),
-                        best_prio=np.asarray(hit.best_prio),
-                        history_best=np.asarray(hit.history_best),
-                        n_samples=hit.n_samples,
-                        arrival_s=ready.request.arrival_s,
-                        analysis_start_s=ready.analysis_start_s,
-                        ready_s=ready.ready_s,
-                        dispatch_s=now, done_s=now,
-                        memo_exact=True,
-                        # provenance, not a second hit: the counters
-                        # treat exact and warm as disjoint (exact wins)
-                        warm_seeded=hit.warm_seeded,
-                        budget=budget,
-                        final_population=(
-                            None if hit.population is None else
-                            Population(accel=hit.population[0],
-                                       prio=hit.population[1])),
-                    ))
-                    return
-                # miss: seed from the nearest stored scenario of the
-                # same transfer family, when one exists (the memo's
-                # donor-distance guard refuses far donors — cold init)
-                ready.warm = self.memo.warm_start(
-                    ready.fit, strategy, family=ready.request.mix)
-            anytime = self.stream.anytime_budget
-            if anytime is not None and anytime < budget \
-                    and ready.request.deadline_s is not None:
-                # anytime split: the caller gets a short-budget interim
-                # schedule fast; a silent full-budget twin refines in
-                # the background and lands in the memo, upgrading the
-                # NEXT arrival of this scenario to an exact replay of
-                # the refined schedule
-                interim = dataclasses.replace(
-                    ready,
-                    request=dataclasses.replace(ready.request,
-                                                budget=anytime),
-                    anytime=True)
-                queues.push(self._compat_key(interim), interim)
-                ready.silent = True
-            queues.push(self._compat_key(ready), ready)
+            if self.tracer.enabled:
+                with self.tracer.span("admit", scope=ready.request.uid) as sp:
+                    self._admit(ready, queues, results, sp)
+            else:
+                self._admit(ready, queues, results, NULL_SPAN)
 
         for p in prepared:
             admit(self._prepared_ready(p))
@@ -722,13 +820,12 @@ class StreamingScheduler:
         Same admission grouping, same compiled executables, bit-identical
         results either way.  Metrics land in ``self.last_metrics``."""
         with self._run_lock:
-            return self._run_serial(requests, shared_cache)
+            with _flight_capture(self.flight, "stream.run_serial"):
+                return self._run_serial(requests, shared_cache)
 
     def _run_serial(self, requests, shared_cache) -> List[StreamResult]:
         """Serial baseline body (``run_serial()``).  @holds:_run_lock"""
-        self._t0 = time.perf_counter()
-        self.last_batches = []
-        self._refined = 0          # serial baseline: no anytime splits
+        self._begin_run()          # serial baseline: no anytime splits
         results: List[StreamResult] = []
 
         # every request is on hand when the batch starts (the same
@@ -812,6 +909,16 @@ class StreamingScheduler:
         return pareto_front(fit, res.final_population,
                             n_samples=res.n_samples,
                             wall_time_s=res.done_s - res.dispatch_s)
+
+    def export_trace(self, path: str) -> str:
+        """Write the current span buffer as a Chrome trace-event file
+        (Perfetto-loadable; ``python -m repro.obs <path>`` summarizes
+        it).  Meaningful only with ``StreamConfig.obs`` enabled — a
+        disabled tracer exports an empty trace."""
+        from repro.obs.export import write_chrome_trace
+        return write_chrome_trace(path, self.tracer.spans(),
+                                  meta={"service": "repro.stream",
+                                        "worker": self.obs.worker})
 
     def close(self) -> None:
         self.pool.shutdown()
